@@ -1,0 +1,38 @@
+"""Tab 3.2 / Tab 3.4 / Fig 3.12 / Fig 3.13 analogue — per-level streaming
+bandwidth + block-shape (access-width) sweep."""
+from __future__ import annotations
+
+from repro.core import probes
+from repro.core.hwmodel import TPU_V5E
+
+
+def run(quick: bool = True) -> list[dict]:
+    rows = []
+    res = probes.probe_stream_bandwidth([1 << p for p in range(18, 24 if quick else 28)])
+    for f, bw in zip(res.x, res.y):
+        rows.append(
+            {
+                "name": f"streambw_host_{f >> 20}MiB",
+                "us_per_call": f / (bw * 1e9) * 1e6,
+                "derived": f"{bw:.2f} GB/s",
+            }
+        )
+    blk = probes.probe_block_shape_bandwidth(footprint=1 << 22)
+    for w, bw in zip(blk.x, blk.y):
+        rows.append(
+            {
+                "name": f"axpybw_host_width{w}",
+                "us_per_call": (1 << 22) * 12 / (bw * 1e9) * 1e6,
+                "derived": f"{bw:.2f} GB/s",
+            }
+        )
+    for lvl in TPU_V5E.levels:
+        if lvl.bandwidth_Bps:
+            rows.append(
+                {
+                    "name": f"streambw_tpu_model_{lvl.name}",
+                    "us_per_call": 0.0,
+                    "derived": f"{lvl.bandwidth_Bps / 1e9:.0f} GB/s",
+                }
+            )
+    return rows

@@ -1,0 +1,28 @@
+"""Tab 4.1 analogue — dependent-issue op latency table.
+
+The paper measures SASS instruction latencies with control-word stall
+tuning; the TPU/JAX analogue is a dependent-chain per-primitive latency
+(chain of fori_loop iterations, loop overhead subtracted)."""
+from __future__ import annotations
+
+from repro.core import probes
+
+
+def run(quick: bool = True) -> list[dict]:
+    res = probes.probe_op_latency(chain=1024 if quick else 8192)
+    rows = [
+        {
+            "name": f"oplat_{name}",
+            "us_per_call": lat * 1e-3,
+            "derived": f"{lat:.2f} ns dependent-issue",
+        }
+        for name, lat in zip(res.x, res.y)
+    ]
+    rows.append(
+        {
+            "name": "oplat_loop_overhead",
+            "us_per_call": res.meta["base_ns"] * 1e-3,
+            "derived": f"{res.meta['base_ns']:.2f} ns baseline",
+        }
+    )
+    return rows

@@ -1,0 +1,24 @@
+"""Tab 2.1 analogue — work-unit <-> execution-unit mapping.
+
+The paper shows warps colliding on a Turing scheduler (same index mod 4)
+halve throughput.  TPU grid cells execute sequentially on the core, so
+throughput/program must stay FLAT — this probe demonstrates that contrast
+(and catches any surprise serialization cliffs)."""
+from __future__ import annotations
+
+from repro.core import probes
+
+
+def run(quick: bool = True) -> list[dict]:
+    res = probes.probe_grid_occupancy(
+        rows_per_program=64 if quick else 256, programs=(1, 2, 3, 4, 6, 8)
+    )
+    base = res.y[0] or 1.0
+    return [
+        {
+            "name": f"grid_occupancy_p{p}",
+            "us_per_call": 0.0,
+            "derived": f"{bw:.2f} GB/s ({bw / base:.2f}x of 1-program)",
+        }
+        for p, bw in zip(res.x, res.y)
+    ]

@@ -1,0 +1,91 @@
+"""§Perf hillclimb tool: lower one cell under config overrides and print the
+three roofline terms (the hypothesis -> change -> re-lower -> measure loop).
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --arch olmoe-1b-7b \
+        --shape train_4k --set moe_shard=ffn --set train_microbatches=2
+
+Each variant is a full dry-run lower+compile with collective/memory/compute
+extraction; results print as a comparison row against the no-override
+baseline artifact (if present in --baseline-dir).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+
+def parse_override(s: str):
+    k, v = s.split("=", 1)
+    for cast in (int, float):
+        try:
+            return k, cast(v)
+        except ValueError:
+            continue
+    if v in ("true", "True"):
+        return k, True
+    if v in ("false", "False"):
+        return k, False
+    return k, v
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--set", action="append", default=[], help="cfg overrides k=v")
+    ap.add_argument("--baseline-dir", default="artifacts/dryrun")
+    ap.add_argument("--tag", default=None)
+    ap.add_argument("--out", default="artifacts/hillclimb")
+    args = ap.parse_args(argv)
+
+    import os
+
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+    from repro.configs import get_config, get_shape
+    from repro.launch.cell import build_cell
+    from repro.launch.dryrun import run_cell
+    from repro.launch.mesh import make_production_mesh
+
+    overrides = dict(parse_override(s) for s in args.set)
+    cfg = get_config(args.arch).replace(**overrides)
+    shape = get_shape(args.shape)
+    mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    t0 = time.time()
+    cell = build_cell(cfg, shape, mesh)
+    rec = run_cell(cell, out_dir)
+    tag = args.tag or "+".join(f"{k}={v}" for k, v in overrides.items()) or "baseline"
+    rec["overrides"] = overrides
+    path = out_dir / f"{cell.name}__{tag.replace('/', '_')}.json"
+    path.write_text(json.dumps(rec, indent=2))
+
+    rt = rec["roofline"]
+    print(f"\n=== {cell.name} [{tag}] ({time.time() - t0:.0f}s) ===")
+    print(f"compute    {rt['compute_s'] * 1e3:10.3f} ms")
+    print(f"memory     {rt['memory_s'] * 1e3:10.3f} ms")
+    print(f"collective {rt['collective_s'] * 1e3:10.3f} ms   <- dominant: {rt['dominant']}")
+    print(f"roofline fraction {rt['roofline_fraction']:.4f}  useful {rt['useful_ratio']:.2f}")
+    print(f"collective ops: {json.dumps(rec['collectives']['op_counts'])}")
+    mem = rec["memory"]["peak_hbm_bytes"] / 2**30
+    amem = rec["analytic_memory"]["analytic_peak_bytes"] / 2**30
+    print(f"mem/dev xla {mem:.2f} GiB, analytic {amem:.2f} GiB")
+
+    base_path = Path(args.baseline_dir) / f"{cell.name}.json"
+    if base_path.exists():
+        base = json.loads(base_path.read_text())
+        if base.get("ok"):
+            brt = base["roofline"]
+            dom = brt["dominant"]
+            print(f"\nvs baseline dominant ({dom}): "
+                  f"{brt[dom + '_s'] * 1e3:.3f} -> {rt[dom + '_s'] * 1e3:.3f} ms "
+                  f"({(rt[dom + '_s'] - brt[dom + '_s']) / brt[dom + '_s'] * 100:+.1f}%)")
+
+
+if __name__ == "__main__":
+    main()

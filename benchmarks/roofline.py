@@ -1,0 +1,105 @@
+"""§Roofline report generator: reads dry-run artifacts and emits the
+per-(arch x shape x mesh) table (markdown + CSV).
+
+    PYTHONPATH=src python -m benchmarks.roofline --dir artifacts/dryrun
+    PYTHONPATH=src python -m benchmarks.roofline --compare before/ after/
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+
+def load_records(d: Path) -> list[dict]:
+    recs = []
+    for f in sorted(d.glob("*.json")):
+        r = json.loads(f.read_text())
+        recs.append(r)
+    return recs
+
+
+def fmt_row(r: dict) -> str:
+    if r.get("skipped"):
+        return (
+            f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | — | skipped: "
+            f"sub-quadratic-only cell |"
+        )
+    if not r.get("ok"):
+        return f"| {r['arch']} | {r['shape']} | FAIL | | | | | | | {r.get('error', '')[:60]} |"
+    rt = r["roofline"]
+    mesh = "x".join(str(v) for v in r.get("mesh", {}).values())
+    mem = r["memory"]["peak_hbm_bytes"] / 2**30
+    amem = r.get("analytic_memory", {}).get("analytic_peak_bytes", 0) / 2**30
+    return (
+        f"| {r['arch']} | {r['shape']} | {mesh} | {rt['compute_s'] * 1e3:.2f} | "
+        f"{rt['memory_s'] * 1e3:.2f} | {rt['collective_s'] * 1e3:.2f} | "
+        f"**{rt['dominant']}** | {rt['useful_ratio']:.2f} | "
+        f"{rt['roofline_fraction']:.3f} | mem {mem:.1f}/{amem:.1f} GiB |"
+    )
+
+
+HEADER = (
+    "| arch | shape | mesh | compute (ms) | memory (ms) | collective (ms) | "
+    "dominant | 6ND/HLO | roofline frac | notes (xla/analytic mem per dev) |\n"
+    "|---|---|---|---|---|---|---|---|---|---|"
+)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--compare", nargs=2, default=None, metavar=("BEFORE", "AFTER"))
+    ap.add_argument("--csv", default=None)
+    args = ap.parse_args(argv)
+
+    if args.compare:
+        before = {r["cell"]: r for r in load_records(Path(args.compare[0])) if r.get("ok") and not r.get("skipped")}
+        after = {r["cell"]: r for r in load_records(Path(args.compare[1])) if r.get("ok") and not r.get("skipped")}
+        print("| cell | dominant | before (ms) | after (ms) | delta |")
+        print("|---|---|---|---|---|")
+        for cell in sorted(set(before) & set(after)):
+            b, a = before[cell]["roofline"], after[cell]["roofline"]
+            dom = b["dominant"]
+            bv = b[f"{dom}_s"] * 1e3
+            av = a[f"{dom}_s"] * 1e3
+            print(f"| {cell} | {dom} | {bv:.2f} | {av:.2f} | {(av - bv) / bv * 100:+.1f}% |")
+        return
+
+    recs = load_records(Path(args.dir))
+    print(HEADER)
+    for r in recs:
+        print(fmt_row(r))
+
+    ok = [r for r in recs if r.get("ok") and not r.get("skipped")]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline"]["roofline_fraction"])
+        coll = max(ok, key=lambda r: r["roofline"]["collective_s"])
+        print()
+        print(f"cells: {len(ok)} ok, {sum(1 for r in recs if r.get('skipped'))} skipped")
+        print(f"worst roofline fraction: {worst['cell']} ({worst['roofline']['roofline_fraction']:.3f})")
+        print(f"most collective-bound: {coll['cell']} ({coll['roofline']['collective_s'] * 1e3:.2f} ms)")
+
+    if args.csv:
+        import csv
+
+        with open(args.csv, "w", newline="") as f:
+            w = csv.writer(f)
+            w.writerow(
+                ["cell", "arch", "shape", "chips", "compute_s", "memory_s",
+                 "collective_s", "dominant", "useful_ratio", "roofline_fraction",
+                 "peak_hbm_gib", "analytic_gib"]
+            )
+            for r in ok:
+                rt = r["roofline"]
+                w.writerow(
+                    [r["cell"], r["arch"], r["shape"], r["chips"], rt["compute_s"],
+                     rt["memory_s"], rt["collective_s"], rt["dominant"],
+                     rt["useful_ratio"], rt["roofline_fraction"],
+                     r["memory"]["peak_hbm_bytes"] / 2**30,
+                     r.get("analytic_memory", {}).get("analytic_peak_bytes", 0) / 2**30]
+                )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""repro — TPU-native reproduction of "Dissecting the NVidia Turing T4 GPU
+via Microbenchmarking" (Jia, Maggioni, Smith, Scarpazza; Citadel, 2019).
+
+The paper's contribution — a microbenchmark suite that distills hardware
+behavior into a quantitative model which then drives software optimization —
+is re-built here as a first-class feature of a JAX training/serving
+framework:
+
+- ``repro.core``      the microbenchmark engine + HardwareModel (Table 3.1 analogue)
+- ``repro.perfmodel`` roofline + HLO cost extraction driven by the HardwareModel
+- ``repro.kernels``   Pallas probe & compute kernels (pchase, membw, axpy, matmul,
+                      flash attention, ssm scan)
+- ``repro.models``    the 10 assigned architectures
+- ``repro.dist``      mesh/sharding/ZeRO/compression/pipeline
+- ``repro.train`` / ``repro.serve`` / ``repro.data`` / ``repro.optim``
+- ``repro.ckpt`` / ``repro.ft``  fault tolerance: checkpoints, resharding,
+                      straggler detection (throttle-model-informed)
+- ``repro.launch``    production mesh + multi-pod dry-run
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,5 @@
+"""Checkpointing: atomic sharded numpy checkpoints + elastic resharding."""
+from .manager import CheckpointManager
+from .reshard import load_resharded
+
+__all__ = ["CheckpointManager", "load_resharded"]

@@ -1,0 +1,19 @@
+"""The paper's primary contribution, TPU-native: a microbenchmark engine
+(pointer-chase, bandwidth, op-latency, contention, GEMM, occupancy probes)
+that distills hardware behavior into a ``HardwareModel`` consumed by the
+roofline analyzer, the tile autotuner, and the straggler detector.
+"""
+from .hwmodel import TPU_V5E, T4_PAPER, HardwareModel, MemoryLevel
+from .throttle import T4_THROTTLE, V5E_THROTTLE, ThrottleParams, simulate, steady_state_clock
+
+__all__ = [
+    "TPU_V5E",
+    "T4_PAPER",
+    "HardwareModel",
+    "MemoryLevel",
+    "T4_THROTTLE",
+    "V5E_THROTTLE",
+    "ThrottleParams",
+    "simulate",
+    "steady_state_clock",
+]

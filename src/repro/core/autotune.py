@@ -1,0 +1,108 @@
+"""HardwareModel-driven tile/layout selection — the paper's Chapter-1 loop
+("know the hardware -> rewrite the access pattern") automated.
+
+Scores candidate Pallas block shapes with a two-term model (MXU compute vs.
+HBM<->VMEM traffic under the VMEM capacity constraint) and returns the
+argmin.  Used by the GEMM benchmark and the §Perf hillclimb.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+from .hwmodel import TPU_V5E, HardwareModel
+
+
+@dataclass(frozen=True)
+class TileChoice:
+    bm: int
+    bk: int
+    bn: int
+    predicted_s: float
+    vmem_bytes: int
+    notes: str = ""
+
+
+def _dtype_bytes(dtype: str) -> int:
+    return {"bfloat16": 2, "float32": 4, "int8": 1}[dtype]
+
+
+def matmul_time_model(
+    m: int, k: int, n: int, bm: int, bk: int, bn: int, dtype: str, hw: HardwareModel
+) -> tuple[float, int]:
+    """(predicted seconds, VMEM working set).
+
+    Traffic model: A is streamed once per N-block column, B once per M-block
+    row, C written once:
+        bytes = (n/bn) * m*k + (m/bm) * k*n + m*n
+    Compute: 2mnk / peak(dtype), assuming full MXU utilization for
+    128-aligned tiles, derated for misaligned ones.
+    """
+    eb = _dtype_bytes(dtype)
+    traffic = (n // bn) * m * k * eb + (m // bm) * k * n * eb + m * n * eb
+    t_mem = traffic / hw.main_memory_Bps
+    align = hw.mxu_align()
+    eff = 1.0
+    for b in (bm, bk, bn):
+        if b % align:
+            eff *= max(b / (align * -(-b // align)), 0.25)
+    t_compute = 2.0 * m * n * k / (hw.peak(dtype) * eff)
+    vmem = (bm * bk + bk * bn + bm * bn) * eb + bm * bn * 4  # + fp32 acc
+    return max(t_mem, t_compute), vmem
+
+
+def choose_matmul_tiles(
+    m: int,
+    k: int,
+    n: int,
+    dtype: str = "bfloat16",
+    hw: HardwareModel = TPU_V5E,
+    candidates: Sequence[int] = (128, 256, 512, 1024),
+    vmem_budget_frac: float = 0.8,
+) -> TileChoice:
+    budget = int(hw.staging_bytes * vmem_budget_frac)
+    best: TileChoice | None = None
+    for bm in candidates:
+        if m % bm:
+            continue
+        for bk in candidates:
+            if k % bk:
+                continue
+            for bn in candidates:
+                if n % bn:
+                    continue
+                t, v = matmul_time_model(m, k, n, bm, bk, bn, dtype, hw)
+                if v > budget:
+                    continue
+                if best is None or t < best.predicted_s:
+                    best = TileChoice(bm, bk, bn, t, v)
+    if best is None:  # fall back to whole-array (small problem)
+        t, v = matmul_time_model(m, k, n, m, k, n, dtype, hw)
+        best = TileChoice(m, k, n, t, v, notes="unblocked-fallback")
+    return best
+
+
+def choose_attention_chunk(
+    seq_len: int,
+    head_dim: int,
+    n_heads_local: int,
+    dtype: str = "bfloat16",
+    hw: HardwareModel = TPU_V5E,
+    candidates: Sequence[int] = (128, 256, 512, 1024, 2048),
+    vmem_budget_frac: float = 0.6,
+) -> int:
+    """KV-chunk size for blockwise attention: biggest chunk whose working set
+    (q tile + kv chunk + acc) fits the VMEM budget — larger chunks amortize
+    HBM streaming (the Ch.1 width lesson applied to attention)."""
+    eb = _dtype_bytes(dtype)
+    budget = hw.staging_bytes * vmem_budget_frac
+    best = candidates[0]
+    for c in candidates:
+        if c > seq_len:
+            break
+        # per-core working set: q block (128, hd), kv chunk (c, hd) x2, acc
+        ws = (128 * head_dim + 2 * c * head_dim) * eb + 128 * head_dim * 4
+        ws *= n_heads_local
+        if ws <= budget:
+            best = c
+    return best

@@ -1,0 +1,148 @@
+"""dissect() — orchestrates the probe suite into a fitted HardwareModel,
+the executable version of the paper's whole Chapter 3 + 4 workflow.
+
+measure mode: runs every probe on the live backend (CPU container: the
+fitted model describes the host — end-to-end methodology validation, since
+the host's real L1/L2/L3 plateaus must emerge from our pointer-chase).
+
+model mode: evaluates the same probe grid analytically against a preset
+HardwareModel (TPU v5e) — the numbers EXPERIMENTS.md reports for the target.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass
+from pathlib import Path
+from typing import Optional
+
+import numpy as np
+
+from . import probes
+from .hwmodel import TPU_V5E, HardwareModel, MemoryLevel, fit_from_probes
+
+
+@dataclass
+class DissectReport:
+    mode: str
+    hardware: HardwareModel
+    probe_results: dict  # name -> ProbeResult-as-dict
+    detected_levels: list  # [(latency_ns, capacity_bytes|None)]
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "mode": self.mode,
+                "hardware": json.loads(self.hardware.to_json()),
+                "probes": self.probe_results,
+                "detected_levels": self.detected_levels,
+            },
+            indent=2,
+        )
+
+
+def dissect_measure(
+    quick: bool = True, out_path: Optional[str] = None
+) -> DissectReport:
+    """Run the full probe suite on the live backend and fit a HardwareModel."""
+    sizes = [1 << p for p in range(12, 25 if quick else 28)]
+    steps = 1 << (14 if quick else 17)
+    res_pc = probes.probe_pointer_chase(sizes, steps=steps)
+    plats, caps = probes.analyze_pointer_chase(res_pc)
+    detected = [
+        (p.latency, caps[i] if i < len(caps) else None) for i, p in enumerate(plats)
+    ]
+
+    res_bw = probes.probe_stream_bandwidth(
+        [1 << p for p in range(18, 24 if quick else 28)]
+    )
+    stream_bps = max(res_bw.y) * 1e9
+
+    res_mm = probes.probe_matmul_throughput(
+        sizes=(256, 512) if quick else (256, 512, 1024, 2048)
+    )
+    flops = {"float32": max(res_mm.y) * 1e9}
+
+    res_ops = probes.probe_op_latency(chain=1024 if quick else 8192)
+
+    hw = fit_from_probes(
+        name="measured-host",
+        plateau_levels=detected,
+        stream_Bps=stream_bps,
+        matmul_flops=flops,
+    )
+    report = DissectReport(
+        mode="measure",
+        hardware=hw,
+        probe_results={
+            r.name: {"x": r.x, "y": r.y, "unit": r.unit, "meta": r.meta}
+            for r in (res_pc, res_bw, res_mm, res_ops)
+        },
+        detected_levels=detected,
+    )
+    if out_path:
+        Path(out_path).write_text(report.to_json())
+    return report
+
+
+# ---------------------------------------------------------------------------
+# model mode: analytic TPU v5e predictions over the same probe grid
+# ---------------------------------------------------------------------------
+def _predict_pchase(hw: HardwareModel, sizes) -> list[float]:
+    lat = []
+    for s in sizes:
+        for lvl in hw.levels:
+            if lvl.size_bytes == 0 or s <= lvl.size_bytes:
+                lat.append(lvl.latency_ns)
+                break
+        else:
+            lat.append(hw.levels[-1].latency_ns)
+    return lat
+
+
+def _predict_stream(hw: HardwareModel, sizes) -> list[float]:
+    out = []
+    for s in sizes:
+        for lvl in hw.levels:
+            if lvl.bandwidth_Bps and (lvl.size_bytes == 0 or s <= lvl.size_bytes):
+                out.append(lvl.bandwidth_Bps / 1e9)
+                break
+        else:
+            out.append(hw.main_memory_Bps / 1e9)
+    return out
+
+
+def _predict_matmul(hw: HardwareModel, sizes, dtype="bfloat16") -> list[float]:
+    peak = hw.peak(dtype)
+    out = []
+    for n in sizes:
+        flops = 2 * n**3
+        t_compute = flops / peak
+        t_mem = 3 * n * n * 2 / hw.main_memory_Bps
+        out.append(flops / max(t_compute, t_mem) / 1e9)
+    return out
+
+
+def dissect_model(hw: HardwareModel = TPU_V5E, out_path: Optional[str] = None) -> DissectReport:
+    sizes = [1 << p for p in range(12, 31)]
+    bw_sizes = [1 << p for p in range(18, 31)]
+    mm_sizes = (256, 512, 1024, 2048, 4096, 8192)
+    report = DissectReport(
+        mode="model",
+        hardware=hw,
+        probe_results={
+            "pointer_chase": {
+                "x": sizes, "y": _predict_pchase(hw, sizes), "unit": "ns/load", "meta": {},
+            },
+            "stream_bandwidth": {
+                "x": bw_sizes, "y": _predict_stream(hw, bw_sizes), "unit": "GB/s", "meta": {},
+            },
+            "matmul_throughput": {
+                "x": [f"bfloat16:{n}" for n in mm_sizes],
+                "y": _predict_matmul(hw, mm_sizes), "unit": "GFLOP/s", "meta": {},
+            },
+        },
+        detected_levels=[(l.latency_ns, l.size_bytes or None) for l in hw.levels],
+    )
+    if out_path:
+        Path(out_path).write_text(report.to_json())
+    return report

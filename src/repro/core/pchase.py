@@ -1,0 +1,74 @@
+"""Pointer-chase pattern generation + latency-curve analysis (Mei & Chu [9],
+paper §3.1/3.8).
+
+``single_cycle_permutation`` (Sattolo) gives the random-walk pattern that
+defeats prefetchers; ``stride_permutation`` gives the paper's TLB-style
+strided walk.  ``detect_plateaus`` reads cache-level sizes and latencies off
+the measured curve exactly the way Fig 3.5 / Tab 3.1 were produced.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+def single_cycle_permutation(n: int, seed: int = 0) -> np.ndarray:
+    """Random permutation with one n-cycle (Sattolo's algorithm)."""
+    rng = np.random.default_rng(seed)
+    items = np.arange(n, dtype=np.int64)
+    for i in range(n - 1, 0, -1):
+        j = rng.integers(0, i)
+        items[i], items[j] = items[j], items[i]
+    # items is now a cyclic ordering; build successor map
+    perm = np.empty(n, dtype=np.int32)
+    perm[items[:-1]] = items[1:]
+    perm[items[-1]] = items[0]
+    return perm
+
+
+def stride_permutation(n: int, stride: int) -> np.ndarray:
+    """Walk with fixed stride (mod n); requires gcd(stride, n) == 1 for a
+    full cycle — the caller should pass odd strides for power-of-two n."""
+    idx = np.arange(n, dtype=np.int64)
+    perm = ((idx + stride) % n).astype(np.int32)
+    return perm
+
+
+@dataclass(frozen=True)
+class Plateau:
+    latency: float  # representative latency of this level
+    start_size: int  # first footprint on the plateau
+    end_size: int  # last footprint before the next transition
+
+
+def detect_plateaus(
+    sizes: np.ndarray, lat: np.ndarray, rel_jump: float = 0.30
+) -> list[Plateau]:
+    """Segment a latency-vs-footprint curve into plateaus.
+
+    A new level starts where latency jumps by more than ``rel_jump`` relative
+    to the running plateau median — the transition size is the capacity of
+    the previous level (paper Fig 3.6 methodology).
+    """
+    sizes = np.asarray(sizes)
+    lat = np.asarray(lat, dtype=np.float64)
+    assert sizes.shape == lat.shape and sizes.ndim == 1
+    plateaus: list[Plateau] = []
+    seg_start = 0
+    seg_vals = [lat[0]]
+    for i in range(1, len(sizes)):
+        base = float(np.median(seg_vals))
+        if lat[i] > base * (1.0 + rel_jump):
+            plateaus.append(Plateau(base, int(sizes[seg_start]), int(sizes[i - 1])))
+            seg_start = i
+            seg_vals = [lat[i]]
+        else:
+            seg_vals.append(lat[i])
+    plateaus.append(Plateau(float(np.median(seg_vals)), int(sizes[seg_start]), int(sizes[-1])))
+    return plateaus
+
+
+def capacities_from_plateaus(plateaus: list[Plateau]) -> list[int]:
+    """Detected capacity of each level = footprint where the next level begins."""
+    return [p.end_size for p in plateaus[:-1]]

@@ -1,0 +1,247 @@
+"""Probe definitions — each maps one of the paper's benchmark families onto
+a measurable JAX/Pallas workload.
+
+Measure mode runs for real on the current backend (CPU here: the probes then
+characterize the *host's* memory hierarchy — the end-to-end validation of the
+methodology).  Model mode predicts TPU v5e numbers from the HardwareModel
+(reported in EXPERIMENTS.md; on a real TPU the same probes run natively).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+from . import pchase as pc
+from .timing import Timing, time_fn
+
+
+@dataclass(frozen=True)
+class ProbeResult:
+    name: str
+    x: tuple  # sweep variable values
+    y: tuple  # measured values
+    unit: str
+    meta: dict
+
+
+# ---------------------------------------------------------------------------
+# §3.1/3.2/3.8: pointer-chase latency vs. working set
+# ---------------------------------------------------------------------------
+def probe_pointer_chase(
+    sizes_bytes: Sequence[int] = (),
+    steps: int = 1 << 16,
+    seed: int = 0,
+    use_pallas: bool = False,
+) -> ProbeResult:
+    """Dependent-load latency (ns/load) vs. footprint.
+
+    Default path times a jitted fori_loop walk (minimal dispatch overhead);
+    ``use_pallas`` times the Pallas kernel instead (identical semantics).
+    """
+    if not sizes_bytes:
+        sizes_bytes = [1 << p for p in range(12, 27)]  # 4 KiB .. 64 MiB
+    lats = []
+    for sz in sizes_bytes:
+        n = max(sz // 4, 8)
+        perm = jnp.asarray(pc.single_cycle_permutation(n, seed))
+        if use_pallas:
+            fn = lambda p: ops.pchase(p, steps)
+        else:
+
+            @jax.jit
+            def fn(p):
+                def body(_, idx):
+                    return p[idx]
+
+                return jax.lax.fori_loop(0, steps, body, jnp.int32(0))
+
+        t = time_fn(fn, perm, warmup=2, reps=5)
+        lats.append(t.min_s / steps * 1e9)
+    return ProbeResult(
+        "pointer_chase", tuple(int(s) for s in sizes_bytes), tuple(lats), "ns/load",
+        {"steps": steps, "pallas": use_pallas},
+    )
+
+
+def analyze_pointer_chase(res: ProbeResult, rel_jump: float = 0.35):
+    """Plateau segmentation -> detected (latency, capacity) per level."""
+    plats = pc.detect_plateaus(np.array(res.x), np.array(res.y), rel_jump)
+    return plats, pc.capacities_from_plateaus(plats)
+
+
+# ---------------------------------------------------------------------------
+# §3.2/3.7: streaming bandwidth vs. footprint and block shape
+# ---------------------------------------------------------------------------
+def probe_stream_bandwidth(
+    footprints: Sequence[int] = (),
+    block_cols: int = 512,
+    use_pallas: bool = False,  # interpret-mode grids are Python loops: XLA path for wall-clock
+) -> ProbeResult:
+    if not footprints:
+        footprints = [1 << p for p in range(16, 28)]  # 64 KiB .. 256 MiB
+    bws = []
+    for sz in footprints:
+        cols = block_cols
+        rows = max(sz // (4 * cols), 8)
+        rows -= rows % 8
+        x = jnp.ones((rows, cols), jnp.float32)
+        if use_pallas:
+            fn = lambda a: ops.stream_reduce(a, block_rows=8, block_cols=cols)
+        else:
+            fn = jax.jit(lambda a: jnp.sum(a, dtype=jnp.float32))
+        t = time_fn(fn, x, warmup=2, reps=5)
+        bws.append(x.size * 4 / t.min_s / 1e9)
+    return ProbeResult(
+        "stream_bandwidth", tuple(int(f) for f in footprints), tuple(bws), "GB/s",
+        {"block_cols": block_cols, "pallas": use_pallas},
+    )
+
+
+def probe_block_shape_bandwidth(
+    footprint: int = 1 << 20, col_widths: Sequence[int] = (128, 256, 512, 1024, 2048)
+) -> ProbeResult:
+    """The Ch.1 axpy experiment: bandwidth vs. access width (VMEM tile cols)."""
+    bws = []
+    for cols in col_widths:
+        rows = max(footprint // (4 * cols), 8)
+        rows -= rows % 8
+        x = jnp.ones((rows, cols), jnp.float32)
+        y = jnp.ones((rows, cols), jnp.float32)
+        fn = lambda a, b: ops.axpy(a, b, 2.0, block_rows=8, block_cols=cols)
+        t = time_fn(fn, x, y, warmup=2, reps=5)
+        bws.append(3 * x.size * 4 / t.min_s / 1e9)  # 2 reads + 1 write
+    return ProbeResult(
+        "block_shape_bandwidth", tuple(int(c) for c in col_widths), tuple(bws), "GB/s",
+        {"footprint": footprint},
+    )
+
+
+# ---------------------------------------------------------------------------
+# §4.1: dependent-issue op latency table (Table 4.1 analogue)
+# ---------------------------------------------------------------------------
+_OP_TABLE: list[tuple[str, Callable, str]] = [
+    ("add.f32", lambda x: x + 1.000001, "f32"),
+    ("mul.f32", lambda x: x * 1.000001, "f32"),
+    ("fma.f32", lambda x: x * 1.000001 + 1e-7, "f32"),
+    ("max.f32", lambda x: jnp.maximum(x, 0.5), "f32"),
+    ("rsqrt.f32", lambda x: jax.lax.rsqrt(jnp.abs(x) + 1.0), "f32"),
+    ("exp.f32", lambda x: jnp.exp(x * 1e-8), "f32"),
+    ("tanh.f32", lambda x: jnp.tanh(x * 0.999), "f32"),
+    ("log.f32", lambda x: jnp.log(jnp.abs(x) + 1.0), "f32"),
+    ("add.s32", lambda x: x + 1, "s32"),
+    ("mul.s32", lambda x: x * 1, "s32"),
+    ("shift.s32", lambda x: (x << 1) >> 1, "s32"),
+]
+
+
+def probe_op_latency(chain: int = 4096, width: int = 128, reps: int = 5) -> ProbeResult:
+    """Dependent-chain latency per op (ns): a ``chain``-long fori_loop where
+    each iteration consumes the previous result — the paper's fixed-latency
+    measurement design (§4.1), with the loop overhead subtracted via a
+    move-only baseline chain."""
+    names, lats = [], []
+
+    def run_chain(op, kind):
+        @jax.jit
+        def fn(x0):
+            def body(_, x):
+                return op(x)
+
+            return jax.lax.fori_loop(0, chain, body, x0)
+
+        if kind == "s32":
+            x0 = jnp.arange(width, dtype=jnp.int32)
+        else:
+            x0 = jnp.linspace(0.5, 1.5, width, dtype=jnp.float32)
+        t = time_fn(fn, x0, warmup=2, reps=reps)
+        return t.min_s / chain * 1e9
+
+    base = run_chain(lambda x: x, "f32")  # loop overhead baseline
+    for name, op, kind in _OP_TABLE:
+        names.append(name)
+        lats.append(max(run_chain(op, kind) - base, 0.0))
+    return ProbeResult(
+        "op_latency", tuple(names), tuple(lats), "ns/op", {"chain": chain, "base_ns": base}
+    )
+
+
+# ---------------------------------------------------------------------------
+# §4.2: scatter-add contention (atomics analogue, Fig 4.1 scenarios)
+# ---------------------------------------------------------------------------
+def probe_scatter_contention(
+    n_updates: int = 1 << 16, collisions: Sequence[int] = (1, 2, 4, 8, 16, 32)
+) -> ProbeResult:
+    """Throughput (updates/s) of scatter-add with R threads per address."""
+    rates = []
+    for r in collisions:
+        tgt = jnp.zeros((max(n_updates // r, 1),), jnp.float32)
+        idx = jnp.repeat(jnp.arange(max(n_updates // r, 1), dtype=jnp.int32), r)[:n_updates]
+        val = jnp.ones((n_updates,), jnp.float32)
+
+        @jax.jit
+        def fn(t, i, v):
+            return t.at[i].add(v)
+
+        tm = time_fn(fn, tgt, idx, val, warmup=2, reps=5)
+        rates.append(n_updates / tm.min_s / 1e6)
+    return ProbeResult(
+        "scatter_contention", tuple(int(c) for c in collisions), tuple(rates),
+        "Mupdates/s", {"n_updates": n_updates},
+    )
+
+
+# ---------------------------------------------------------------------------
+# §4.4: matmul arithmetic throughput (Fig 4.2 / Table 4.3 analogue)
+# ---------------------------------------------------------------------------
+def probe_matmul_throughput(
+    sizes: Sequence[int] = (256, 512, 1024, 2048),
+    dtypes: Sequence[str] = ("float32",),
+    use_pallas: bool = False,
+) -> ProbeResult:
+    recs, keys = [], []
+    for dt in dtypes:
+        jdt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "int8": jnp.int8}[dt]
+        for n in sizes:
+            if jdt == jnp.int8:
+                a = jnp.ones((n, n), jdt)
+                b = jnp.ones((n, n), jdt)
+                fn = jax.jit(lambda a, b: jax.lax.dot_general(
+                    a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32))
+            else:
+                a = jnp.ones((n, n), jdt)
+                b = jnp.ones((n, n), jdt)
+                if use_pallas:
+                    fn = lambda a, b: ops.matmul(a, b, bm=min(128, n), bk=min(128, n), bn=min(128, n))
+                else:
+                    fn = jax.jit(lambda a, b: a @ b)
+            t = time_fn(fn, a, b, warmup=2, reps=5)
+            keys.append(f"{dt}:{n}")
+            recs.append(2 * n**3 / t.min_s / 1e9)
+    return ProbeResult("matmul_throughput", tuple(keys), tuple(recs), "GFLOP/s", {})
+
+
+# ---------------------------------------------------------------------------
+# Tab 2.1 analogue: grid occupancy (programs vs. core count)
+# ---------------------------------------------------------------------------
+def probe_grid_occupancy(
+    rows_per_program: int = 256, programs: Sequence[int] = (1, 2, 3, 4, 6, 8)
+) -> ProbeResult:
+    """Throughput vs. grid size.  On TPU, grid cells execute sequentially per
+    core; throughput/program is flat (unlike the Turing scheduler-collision
+    table) — the probe demonstrates/verifies that contrast."""
+    rates = []
+    for g in programs:
+        x = jnp.ones((g * rows_per_program, 512), jnp.float32)
+        fn = lambda a: ops.stream_reduce(a, block_rows=rows_per_program, block_cols=512)
+        t = time_fn(fn, x, warmup=2, reps=5)
+        rates.append(x.size * 4 / t.min_s / 1e9)
+    return ProbeResult(
+        "grid_occupancy", tuple(int(p) for p in programs), tuple(rates), "GB/s",
+        {"rows_per_program": rows_per_program},
+    )

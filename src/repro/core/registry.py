@@ -1,0 +1,22 @@
+"""Benchmark registry: benchmarks/run.py discovers paper-table benchmarks here."""
+from __future__ import annotations
+
+from typing import Callable
+
+_REGISTRY: dict[str, Callable] = {}
+
+
+def register(name: str):
+    def deco(fn: Callable) -> Callable:
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def get(name: str) -> Callable:
+    return _REGISTRY[name]
+
+
+def names() -> list[str]:
+    return sorted(_REGISTRY)

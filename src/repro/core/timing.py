@@ -1,0 +1,39 @@
+"""Steady-state wall-clock harness (the paper's clock-bracket methodology,
+adapted: no %%clock register on host, so warm-up + median-of-k around
+``block_until_ready``)."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+
+
+@dataclass(frozen=True)
+class Timing:
+    median_s: float
+    min_s: float
+    mean_s: float
+    reps: int
+
+    @property
+    def median_us(self) -> float:
+        return self.median_s * 1e6
+
+
+def time_fn(fn: Callable, *args, warmup: int = 3, reps: int = 10, **kw) -> Timing:
+    """Times ``fn(*args, **kw)``; fn must return jax arrays (blocked on)."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    samples = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        samples.append(time.perf_counter() - t0)
+    samples.sort()
+    n = len(samples)
+    med = samples[n // 2] if n % 2 else 0.5 * (samples[n // 2 - 1] + samples[n // 2])
+    return Timing(median_s=med, min_s=samples[0], mean_s=sum(samples) / n, reps=n)

@@ -1,0 +1,6 @@
+"""Data pipeline: deterministic synthetic token streams, host sharding,
+background prefetch, exact skip-ahead for fault-tolerant resume."""
+from .synth import SyntheticLM, zipf_tokens
+from .pipeline import DataPipeline
+
+__all__ = ["SyntheticLM", "zipf_tokens", "DataPipeline"]

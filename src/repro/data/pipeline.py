@@ -1,0 +1,102 @@
+"""Host-side data pipeline: background prefetch + device placement.
+
+- double-buffered prefetch thread (depth configurable),
+- per-batch device placement against a NamedSharding (the host in a real
+  multi-host run places only its addressable shard; jax.device_put handles
+  both cases uniformly),
+- ``seek(step)`` for exact restart after failure (counter-mode source).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+
+class DataPipeline:
+    def __init__(
+        self,
+        batch_fn: Callable[[int], dict],  # step -> host batch (numpy trees)
+        sharding=None,  # NamedSharding for device placement (or None)
+        prefetch: int = 2,
+        start_step: int = 0,
+    ):
+        self._batch_fn = batch_fn
+        self._sharding = sharding
+        self._step = start_step
+        self._prefetch = prefetch
+        self._q: Optional[queue.Queue] = None
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        if prefetch > 0:
+            self._start_thread()
+
+    # ------------------------------------------------------------------
+    def _produce(self, step: int) -> dict:
+        batch = self._batch_fn(step)
+        if self._sharding is not None:
+            shardings = self._sharding
+            if not isinstance(shardings, dict):
+                shardings = {k: shardings for k in batch}
+            batch = {
+                k: jax.device_put(v, shardings[k]) if k in shardings else v
+                for k, v in batch.items()
+            }
+        return batch
+
+    def _start_thread(self):
+        self._q = queue.Queue(maxsize=self._prefetch)
+        self._stop.clear()
+
+        def worker(start: int):
+            s = start
+            while not self._stop.is_set():
+                try:
+                    item = (s, self._produce(s))
+                except Exception as e:  # noqa: BLE001
+                    self._q.put(("error", e))
+                    return
+                while not self._stop.is_set():
+                    try:
+                        self._q.put(item, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+                s += 1
+
+        self._thread = threading.Thread(target=worker, args=(self._step,), daemon=True)
+        self._thread.start()
+
+    # ------------------------------------------------------------------
+    def __next__(self) -> tuple[int, dict]:
+        if self._q is None:
+            step = self._step
+            self._step += 1
+            return step, self._produce(step)
+        item = self._q.get()
+        if item[0] == "error":
+            raise item[1]
+        self._step = item[0] + 1
+        return item
+
+    def __iter__(self):
+        return self
+
+    def seek(self, step: int):
+        """Exact restart: next batch returned is for ``step``."""
+        if self._thread is not None:
+            self._stop.set()
+            self._thread.join(timeout=5)
+            while self._q is not None and not self._q.empty():
+                self._q.get_nowait()
+        self._step = step
+        if self._prefetch > 0:
+            self._start_thread()
+
+    def close(self):
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5)

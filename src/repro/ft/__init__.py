@@ -1,0 +1,7 @@
+"""Fault tolerance: heartbeats, throttle-aware straggler detection, elastic
+restart policy."""
+from .heartbeat import HeartbeatMonitor
+from .straggler import StragglerDetector
+from .elastic import ElasticController
+
+__all__ = ["HeartbeatMonitor", "StragglerDetector", "ElasticController"]

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels.
+
+Probe kernels (the paper's microbenchmark methodology, TPU-native):
+  - ``pchase``   pointer-chase dependent-load latency probe (Mei & Chu, §3.1)
+  - ``membw``    streaming bandwidth probe with explicit BlockSpec tiling (§3.2/3.7)
+  - ``axpy``     the Ch.1 "wide accesses win" example as VMEM-tile width sweep
+
+Compute kernels (perf-critical model hot-spots):
+  - ``matmul``           MXU-tiled matmul (the §4.4 GEMM-throughput probe)
+  - ``flash_attention``  blockwise-softmax attention
+  - ``ssm_scan``         chunked SSD (Mamba2) scan
+
+Each kernel is TARGETED at TPU (pl.pallas_call + BlockSpec VMEM tiling) and
+VALIDATED in interpret mode on CPU against the pure-jnp oracles in ``ref.py``.
+``ops.py`` holds the jit'd public wrappers.
+"""

@@ -1,0 +1,45 @@
+"""axpy kernel — the paper's Chapter-1 example, TPU-native.
+
+The paper showed cublasSaxpy's 64-bit global loads leave ~2x bandwidth on the
+table vs. 128-bit vectorized loads.  The TPU restatement: an ``y += a*x``
+kernel is bandwidth-bound, so the VMEM block shape (how many (8,128) native
+tiles each grid step streams) controls achieved HBM bandwidth.  The benchmark
+sweeps ``block_cols`` the way Fig 1.1 sweeps access width.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _axpy_kernel(alpha_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] * alpha_ref[0, 0] + y_ref[...]
+
+
+def axpy_pallas(
+    x: jax.Array,
+    y: jax.Array,
+    alpha: jax.Array | float,
+    *,
+    block_rows: int = 8,
+    block_cols: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """x, y: (R, C) with R % block_rows == 0 and C % block_cols == 0."""
+    r, c = x.shape
+    assert r % block_rows == 0 and c % block_cols == 0, (x.shape, block_rows, block_cols)
+    grid = (r // block_rows, c // block_cols)
+    alpha_arr = jnp.asarray(alpha, x.dtype).reshape(1, 1)
+    return pl.pallas_call(
+        _axpy_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),
+            pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),
+        interpret=interpret,
+    )(alpha_arr, x, y)

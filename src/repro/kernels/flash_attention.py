@@ -1,0 +1,119 @@
+"""Flash-attention Pallas kernel: blockwise online softmax with VMEM-resident
+running (m, l, acc) state — the HBM->VMEM tiling the paper's Ch.3 analysis
+prescribes for bandwidth-bound inner loops.
+
+Grid: (batch*heads, q_blocks, kv_blocks), kv innermost ("arbitrary"
+semantics: scratch persists across kv steps).  Causal blocks above the
+diagonal are skipped entirely (predicated off), matching the lower-triangular
+work layout of a causal LM.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, causal: bool, bq: int, bk: int, kv_len: int, q_offset: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    if causal:
+        # skip blocks strictly above the causal diagonal
+        run = (ki * bk) <= (q_offset + qi * bq + bq - 1)
+    else:
+        run = (ki * bk) < kv_len
+
+    @pl.when(run)
+    def _():
+        q = q_ref[0].astype(jnp.float32) * scale  # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)  # (bk, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (bq, bk)
+        kidx = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        valid = kidx < kv_len
+        if causal:
+            qidx = q_offset + qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            valid = jnp.logical_and(valid, kidx <= qidx)
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(valid, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _():
+        o_ref[0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    bq: int = 128,
+    bk: int = 128,
+    kv_len: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """q (BH, Sq, hd), k/v (BH, Skv, hd) — head-flattened layout.
+
+    Sq/Skv are padded to block multiples by the ops wrapper; ``kv_len`` (the
+    TRUE unpadded key count) masks padded keys inert.
+    """
+    bh, sq, hd = q.shape
+    _, skv, _ = k.shape
+    if kv_len is None:
+        kv_len = skv
+    bq = min(bq, sq)
+    bk = min(bk, skv)
+    assert sq % bq == 0 and skv % bk == 0
+    grid = (bh, sq // bq, skv // bk)
+    kern = partial(
+        _flash_kernel,
+        scale=hd**-0.5, causal=causal, bq=bq, bk=bk, kv_len=kv_len, q_offset=q_offset,
+    )
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,63 @@
+"""MXU-tiled matmul kernel — the §4.4 arithmetic-throughput probe and the
+block-shape autotuning target.
+
+Grid (M/bm, N/bn, K/bk), K innermost, fp32 accumulation in a VMEM scratch
+(the MXU-native pattern).  Block dims should be multiples of 128 to align
+with the 128x128 systolic array (cf. the paper's finding that >=128
+threads/block are required to fill a Turing SM — the TPU analogue is
+128-aligned MXU tiles).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref):
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    out_dtype=None,
+    interpret: bool = True,
+) -> jax.Array:
+    """a (M,K) @ b (K,N); dims must divide by the block sizes."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, ((m, k, n), (bm, bk, bn))
+    out_dtype = out_dtype or a.dtype
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,94 @@
+"""Streaming-bandwidth probe kernels (paper §3.1/3.2/3.7 analogue).
+
+``stream_copy``: HBM->VMEM->HBM round trip per block (write-allocate path).
+``stream_reduce``: read-only scan accumulating a checksum — the TPU analogue
+of the paper's l1_bw/l2_bw read benchmarks (the accumulate into ``sink``
+plays the same side-effect role as the paper's ``dsink``).
+
+Block shape is the probe variable: footprint-per-step = block bytes, so
+sweeping block shape vs. array footprint maps the memory-hierarchy transfer
+efficiency exactly like the paper's working-set sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def stream_copy(
+    x: jax.Array, *, block_rows: int = 8, block_cols: int = 512, interpret: bool = True
+) -> jax.Array:
+    r, c = x.shape
+    assert r % block_rows == 0 and c % block_cols == 0
+    grid = (r // block_rows, c // block_cols)
+    return pl.pallas_call(
+        _copy_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),
+        interpret=interpret,
+    )(x)
+
+
+def _reduce_kernel(x_ref, o_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(jnp.logical_and(i == 0, j == 0))
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[0, 0] += jnp.sum(x_ref[...].astype(jnp.float32))
+
+
+def stream_reduce(
+    x: jax.Array, *, block_rows: int = 8, block_cols: int = 512, interpret: bool = True
+) -> jax.Array:
+    """Read-bandwidth probe: returns the (1,1) fp32 checksum."""
+    r, c = x.shape
+    assert r % block_rows == 0 and c % block_cols == 0
+    grid = (r // block_rows, c // block_cols)
+    return pl.pallas_call(
+        _reduce_kernel,
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        interpret=interpret,
+    )(x)
+
+
+def _strided_reduce_kernel(x_ref, o_ref, *, stride: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # touch one lane-row out of every `stride` sublane-rows: sparse-access
+    # pattern probing load granularity (paper Tab 3.1 "load granularity")
+    o_ref[0, 0] += jnp.sum(x_ref[::stride, :].astype(jnp.float32))
+
+
+def strided_reduce(
+    x: jax.Array, *, stride: int, block_rows: int = 64, interpret: bool = True
+) -> jax.Array:
+    r, c = x.shape
+    assert r % block_rows == 0
+    grid = (r // block_rows,)
+    from functools import partial
+
+    return pl.pallas_call(
+        partial(_strided_reduce_kernel, stride=stride),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (ground truth for allclose tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def axpy_ref(x: jax.Array, y: jax.Array, alpha) -> jax.Array:
+    return jnp.asarray(alpha, x.dtype) * x + y
+
+
+def copy_ref(x: jax.Array) -> jax.Array:
+    return x
+
+
+def reduce_ref(x: jax.Array) -> jax.Array:
+    return jnp.sum(x.astype(jnp.float32)).reshape(1, 1)
+
+
+def strided_reduce_ref(x: jax.Array, stride: int) -> jax.Array:
+    return jnp.sum(x[::stride, :].astype(jnp.float32)).reshape(1, 1)
+
+
+def pchase_ref(perm: np.ndarray, steps: int) -> int:
+    idx = 0
+    arr = np.asarray(perm)
+    for _ in range(steps):
+        idx = int(arr[idx])
+    return idx
+
+
+def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def flash_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True, q_offset: int = 0
+) -> jax.Array:
+    """q (BH, Sq, hd); k/v (BH, Skv, hd)."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        sq, skv = s.shape[-2], s.shape[-1]
+        qi = q_offset + jnp.arange(sq)[:, None]
+        ki = jnp.arange(skv)[None, :]
+        s = jnp.where(ki <= qi, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssm_scan_ref(u, a_log, b, c):
+    """Sequential SSD recurrence.  u (BH,S,P); a_log (BH,S); b/c (BH,S,N)."""
+    bh, s, p = u.shape
+    n = b.shape[-1]
+
+    def per_seq(u1, a1, b1, c1):
+        def step(h, inp):
+            u_t, a_t, b_t, c_t = inp
+            h = h * jnp.exp(a_t) + jnp.outer(u_t, b_t)
+            y = h @ c_t
+            return h, y
+
+        h0 = jnp.zeros((p, n), jnp.float32)
+        _, ys = jax.lax.scan(
+            step,
+            h0,
+            (u1.astype(jnp.float32), a1.astype(jnp.float32),
+             b1.astype(jnp.float32), c1.astype(jnp.float32)),
+        )
+        return ys
+
+    return jax.vmap(per_seq)(u, a_log, b, c).astype(u.dtype)

@@ -1,0 +1,176 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("REPRO_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on the
+production mesh (16x16 single-pod / 2x16x16 multi-pod) and record per-device
+memory, FLOPs, and collective traffic for the roofline report.
+
+The XLA_FLAGS assignment above MUST precede any jax import (device count is
+locked at first backend init).  Run as:
+
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+        [--mesh single|multi|both] [--out artifacts/dryrun]
+
+Exit code is non-zero if any requested cell fails to compile.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import CONFIGS, SHAPES, get_config, get_shape  # noqa: E402
+from repro.launch.cell import Cell, analytic_memory, build_cell, cost_reference  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.perfmodel.costs import extract_costs  # noqa: E402
+from repro.perfmodel.hlo import collective_bytes  # noqa: E402
+from repro.perfmodel.roofline import roofline  # noqa: E402
+
+
+def run_cell(cell: Cell, out_dir: Path, save_hlo: bool = False, ref: dict | None = None) -> dict:
+    t0 = time.time()
+    lowered = cell.lower()
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    costs = extract_costs(compiled)
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    chips = cell.mesh.devices.size
+
+    # loop-trip-count correction: XLA cost_analysis counts while bodies once.
+    if ref is None:
+        ref = cost_reference(cell.cfg, cell.shape)
+    if ref.get("global_flops"):
+        scanned = max(costs.flops_per_device, 1.0)
+        ratio = max((ref["global_flops"] / chips) / scanned, 1.0)
+        costs.flops_per_device = ref["global_flops"] / chips
+        costs.bytes_per_device = costs.bytes_per_device * ratio
+    else:
+        ratio = 1.0
+
+    tokens = (
+        cell.shape.global_batch
+        if cell.shape.kind == "decode"
+        else cell.shape.global_batch * cell.shape.seq_len
+    )
+    rt = roofline(
+        costs,
+        coll,
+        chips=chips,
+        kind=cell.shape.kind,
+        n_params_active=cell.n_params_active,
+        tokens=tokens,
+    )
+    rec = {
+        "cell": cell.name,
+        "arch": cell.cfg.name,
+        "shape": cell.shape.name,
+        "mesh": dict(cell.mesh.shape),
+        "chips": chips,
+        "kind": cell.shape.kind,
+        "n_params": cell.n_params,
+        "n_params_active": cell.n_params_active,
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+        "loop_correction": ratio,
+        "cost_reference": ref,
+        "memory": costs.summary(),
+        "analytic_memory": analytic_memory(cell),
+        "collectives": coll.summary(),
+        "roofline": rt.summary(),
+        "ok": True,
+    }
+    if save_hlo:
+        (out_dir / f"{cell.name}.hlo.txt").write_text(hlo)
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None, help="arch id (repeatable)")
+    ap.add_argument("--shape", action="append", default=None, help="shape id (repeatable)")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None, help="override per-arch value")
+    args = ap.parse_args(argv)
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    archs = args.arch or sorted(CONFIGS)
+    shapes = args.shape or list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_fail = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        if args.microbatches:
+            cfg = cfg.replace(train_microbatches=args.microbatches)
+        for shape_name in shapes:
+            shape = get_shape(shape_name)
+            if not cfg.supports_shape(shape):
+                rec = {
+                    "cell": f"{arch}__{shape_name}",
+                    "arch": arch,
+                    "shape": shape_name,
+                    "ok": True,
+                    "skipped": "inapplicable (full-attention arch on long_500k; see DESIGN.md)",
+                }
+                (out_dir / f"{arch}__{shape_name}__skip.json").write_text(json.dumps(rec, indent=2))
+                print(f"[skip] {arch} x {shape_name}: inapplicable")
+                continue
+            ref = None  # shared across meshes for this (arch, shape)
+            for multi in meshes:
+                tag = "multi" if multi else "single"
+                path = out_dir / f"{arch}__{shape_name}__{tag}.json"
+                if args.skip_existing and path.exists():
+                    try:
+                        if json.loads(path.read_text()).get("ok"):
+                            print(f"[keep] {path.name}")
+                            continue
+                    except Exception:  # noqa: BLE001
+                        pass
+                mesh = make_production_mesh(multi_pod=multi)
+                try:
+                    cell = build_cell(cfg, shape, mesh)
+                    if ref is None:
+                        t0 = time.time()
+                        ref = cost_reference(cfg, shape)
+                        print(f"[ref]  {arch} x {shape_name}: "
+                              f"{ref['global_flops']/1e12:.1f} TF global ({time.time()-t0:.0f}s)")
+                    rec = run_cell(cell, out_dir, save_hlo=args.save_hlo, ref=ref)
+                    mem_gib = rec["memory"]["peak_hbm_bytes"] / 2**30
+                    an_gib = rec["analytic_memory"]["analytic_peak_bytes"] / 2**30
+                    print(
+                        f"[ok]   {rec['cell']}: compile {rec['compile_s']:.1f}s, "
+                        f"mem/dev {mem_gib:.2f} GiB (analytic {an_gib:.2f}), "
+                        f"dominant {rec['roofline']['dominant']}, "
+                        f"roofline {rec['roofline']['roofline_fraction']:.3f}"
+                    )
+                except Exception as e:  # noqa: BLE001
+                    n_fail += 1
+                    rec = {
+                        "cell": f"{arch}__{shape_name}__{tag}",
+                        "arch": arch,
+                        "shape": shape_name,
+                        "mesh_tag": tag,
+                        "ok": False,
+                        "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-4000:],
+                    }
+                    print(f"[FAIL] {arch} x {shape_name} x {tag}: {type(e).__name__}: {e}")
+                path.write_text(json.dumps(rec, indent=2))
+    print(f"done; failures: {n_fail}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

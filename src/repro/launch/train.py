@@ -1,0 +1,90 @@
+"""Training driver.
+
+Full-scale invocation (real TPU fleet) uses the production mesh; on this CPU
+container use ``--reduced`` to train a smoke-size variant of any arch, or
+``examples/train_tiny_lm.py`` for the end-to-end ~100M-param run.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --reduced \
+        --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.ckpt import CheckpointManager
+from repro.configs import get_config
+from repro.data import DataPipeline, SyntheticLM
+from repro.models import build_model
+from repro.optim import AdamW
+from repro.optim.schedule import cosine_with_warmup
+from repro.train.loop import FailureInjector, LoopConfig, train_loop
+from repro.train.step import TrainState, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fail-at", type=int, default=None, help="inject a failure (FT demo)")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    cfg = cfg.replace(train_microbatches=args.microbatches)
+
+    model = build_model(cfg)
+    opt = AdamW()
+    lr_fn = cosine_with_warmup(args.lr, warmup=max(args.steps // 20, 1), total=args.steps)
+    step_fn = jax.jit(
+        make_train_step(model.loss_fn, opt, lr_fn, microbatches=cfg.train_microbatches),
+        donate_argnums=(0,),
+    )
+
+    params = model.init(jax.random.key(args.seed))
+    state = TrainState(params=params, opt=opt.init(params))
+    n_params = sum(int(x.size) for x in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n_params/1e6:.2f}M params")
+
+    source = SyntheticLM(cfg.vocab_size, args.seq, args.batch, seed=args.seed)
+
+    def batch_fn(step):
+        b = source.batch_at(step)
+        if cfg.family in ("vlm", "encdec"):
+            b["frontend"] = np.zeros((args.batch, cfg.frontend_len, cfg.d_model), np.float32)
+        return b
+
+    pipeline = DataPipeline(batch_fn, prefetch=2)
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    injector = FailureInjector(args.fail_at) if args.fail_at else None
+
+    state, history = train_loop(
+        step_fn,
+        state,
+        pipeline,
+        ckpt=ckpt,
+        cfg=LoopConfig(total_steps=args.steps, ckpt_every=args.ckpt_every),
+        injector=injector,
+        on_metrics=lambda r: print(
+            f"step {r['step']:5d}  loss {r['loss']:.4f}  |g| {r['grad_norm']:.3f}  "
+            f"{r['step_time_s']*1e3:.0f} ms"
+        ),
+    )
+    pipeline.close()
+    print(f"final loss {history[-1]['loss']:.4f} (first {history[0]['loss']:.4f})")
+    return history
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Model zoo for the 10 assigned architectures (pure-functional JAX)."""
+from .api import build_model, ModelApi, input_specs
+
+__all__ = ["build_model", "ModelApi", "input_specs"]

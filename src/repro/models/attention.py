@@ -1,0 +1,276 @@
+"""GQA attention: blockwise (memory-efficient online-softmax), naive, and
+Pallas flash paths; KV-cache decode.
+
+The blockwise path is the XLA analogue of the flash kernel in
+``repro.kernels.flash_attention`` — dry-runs compile this path (it lowers on
+any backend); real TPU runs can select the Pallas kernel via
+``cfg.attn_impl == "pallas"``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import Params, dense_init, split_keys
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+def attn_init(rng, cfg, d_in: int | None = None, dtype=jnp.float32) -> Params:
+    d = d_in if d_in is not None else cfg.d_model
+    h, k, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    kq, kk, kv, ko = split_keys(rng, 4)
+    p = {
+        "wq": dense_init(kq, (d, h, hd), fan_in=d, dtype=dtype),
+        "wk": dense_init(kk, (d, k, hd), fan_in=d, dtype=dtype),
+        "wv": dense_init(kv, (d, k, hd), fan_in=d, dtype=dtype),
+        "wo": dense_init(ko, (h, hd, cfg.d_model), fan_in=h * hd, dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((k, hd), dtype)
+        p["bv"] = jnp.zeros((k, hd), dtype)
+    return p
+
+
+def qkv_proj(params: Params, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B, S, d) -> q (B,S,H,hd), k/v (B,S,K,hd)."""
+    q = jnp.einsum("bsd,dhx->bshx", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dkx->bskx", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dkx->bskx", x, params["wv"].astype(x.dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    return q, k, v
+
+
+def out_proj(params: Params, o: jax.Array, x_dtype) -> jax.Array:
+    return jnp.einsum("bshx,hxd->bsd", o, params["wo"].astype(x_dtype))
+
+
+# ---------------------------------------------------------------------------
+# core attention maths
+# ---------------------------------------------------------------------------
+def _group(q: jax.Array, n_kv: int) -> jax.Array:
+    """(B,S,H,hd) -> (B,K,G,S,hd)."""
+    b, s, h, hd = q.shape
+    g = h // n_kv
+    return q.reshape(b, s, n_kv, g, hd).transpose(0, 2, 3, 1, 4)
+
+
+def _ungroup(o: jax.Array) -> jax.Array:
+    """(B,K,G,S,hd) -> (B,S,H,hd)."""
+    b, k, g, s, hd = o.shape
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, s, k * g, hd)
+
+
+def naive_attention(q, k, v, *, causal: bool, q_offset: int = 0) -> jax.Array:
+    """Reference O(S^2)-memory attention.  q (B,S,H,hd), k/v (B,Skv,K,hd)."""
+    n_kv = k.shape[2]
+    qg = _group(q, n_kv)  # (B,K,G,Sq,hd)
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bkgsh,btkh->bkgst", qg.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        sq, skv = s.shape[-2], s.shape[-1]
+        qi = q_offset + jnp.arange(sq)[:, None]
+        ki = jnp.arange(skv)[None, :]
+        s = jnp.where(ki <= qi, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkh->bkgsh", p.astype(v.dtype), v)
+    return _ungroup(o)
+
+
+def blockwise_attention(q, k, v, *, causal: bool, chunk: int, q_offset: int = 0) -> jax.Array:
+    """Online-softmax attention, scanned over KV chunks (flash-style in XLA).
+
+    q (B,Sq,H,hd), k/v (B,Skv,K,hd).  Memory is O(Sq * Skv/chunk-free):
+    no (Sq, Skv) tensor is ever materialized beyond one (Sq, chunk) tile.
+    """
+    n_kv = k.shape[2]
+    skv = k.shape[1]
+    chunk = min(chunk, skv)
+    n_chunks = -(-skv // chunk)
+    pad = n_chunks * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    qg = _group(q, n_kv).astype(jnp.float32)  # (B,K,G,Sq,hd)
+    b, kk, g, sq, hd = qg.shape
+    scale = hd ** -0.5
+    kc = k.reshape(b, n_chunks, chunk, n_kv, hd).transpose(1, 0, 3, 2, 4)  # (N,B,K,C,hd)
+    vc = v.reshape(b, n_chunks, chunk, n_kv, hd).transpose(1, 0, 3, 2, 4)
+
+    qi = q_offset + jnp.arange(sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        idx, k_j, v_j = inp
+        s = jnp.einsum("bkgsh,bkch->bkgsc", qg, k_j.astype(jnp.float32)) * scale
+        ki = idx * chunk + jnp.arange(chunk)
+        valid = ki < skv
+        if causal:
+            valid = valid[None, :] & (ki[None, :] <= qi[:, None])
+        else:
+            valid = jnp.broadcast_to(valid[None, :], (sq, chunk))
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgsc,bkch->bkgsh", p, v_j.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    # checkpoint the chunk body: backward re-derives the (Sq, chunk) score
+    # tile instead of stashing one per chunk (flash-attention memory shape)
+    body = jax.checkpoint(body)
+
+    m0 = jnp.full((b, kk, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kk, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kk, g, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(n_chunks), kc, vc)
+    )
+    o = acc / jnp.maximum(l[..., None], 1e-30)
+    return _ungroup(o).astype(q.dtype)
+
+
+def pallas_attention(q, k, v, *, causal: bool, chunk: int, q_offset: int = 0) -> jax.Array:
+    """Flash-attention Pallas kernel path (interpret-mode on CPU)."""
+    from repro.kernels import ops as kops
+
+    n_kv = k.shape[2]
+    g = q.shape[2] // n_kv
+    if g > 1:  # kernel takes matched head counts; expand kv (still exact)
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    return kops.flash_attention(q, k, v, causal=causal, q_offset=q_offset)
+
+
+def attention_impl(cfg):
+    if cfg.attn_impl == "naive":
+        return partial(naive_attention)
+    if cfg.attn_impl == "pallas":
+        return partial(pallas_attention, chunk=cfg.attn_chunk)
+    return partial(blockwise_attention, chunk=cfg.attn_chunk)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence layer (train / prefill / encoder / cross)
+# ---------------------------------------------------------------------------
+def attention_block(
+    params: Params,
+    x: jax.Array,
+    cfg,
+    positions: jax.Array,
+    *,
+    causal: bool = True,
+    use_rope: bool = True,
+    kv_x: Optional[jax.Array] = None,
+    kv_positions: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Full attention sub-layer (no residual/norm — caller owns those).
+
+    ``kv_x`` switches to cross-attention (keys/values from encoder states).
+    """
+    xq = x if kv_x is None else x
+    xkv = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhx->bshx", xq, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dkx->bskx", xkv, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dkx->bskx", xkv, params["wv"].astype(x.dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    if use_rope:
+        from .common import apply_rope
+
+        q = apply_rope(q, positions, cfg.rope_theta)
+        kpos = positions if kv_positions is None else kv_positions
+        k = apply_rope(k, kpos, cfg.rope_theta)
+    o = attention_impl(cfg)(q, k, v, causal=causal)
+    return out_proj(params, o, x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache + decode
+# ---------------------------------------------------------------------------
+def init_cache(cfg, batch: int, max_len: int, n_layers: int, dtype=jnp.bfloat16):
+    """Stacked KV cache (L, B, Smax, K, hd) pair — works under scanned layers."""
+    shape = (n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_specs(cfg, batch: int, max_len: int, n_layers: int, dtype=jnp.bfloat16):
+    shape = (n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, dtype),
+        "v": jax.ShapeDtypeStruct(shape, dtype),
+    }
+
+
+def decode_attention(
+    params: Params,
+    x: jax.Array,
+    cfg,
+    cache_k: jax.Array,
+    cache_v: jax.Array,
+    pos: jax.Array,
+    *,
+    use_rope: bool = True,
+    update_cache: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step for one layer.
+
+    x: (B, d) new-token hidden; cache_k/v: (B, Smax, K, hd); pos: (B,) int32
+    (index where the new token lands).  Returns (y (B, d), new_k, new_v).
+    """
+    b, d = x.shape
+    k_heads, hd = cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bd,dhx->bhx", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bd,dkx->bkx", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bd,dkx->bkx", x, params["wv"].astype(x.dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    if use_rope:
+        from .common import apply_rope
+
+        q = apply_rope(q[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+        k = apply_rope(k[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+
+    if update_cache:
+        # mask-based in-place write (elementwise select, not scatter: keeps
+        # a sequence-sharded cache sharded under GSPMD — a scatter on the
+        # sharded dim would force replication)
+        smax_ = cache_k.shape[1]
+        write = (jnp.arange(smax_, dtype=jnp.int32)[None, :] == pos[:, None])[
+            :, :, None, None
+        ]  # (B, Smax, 1, 1)
+        cache_k = jnp.where(write, k[:, None].astype(cache_k.dtype), cache_k)
+        cache_v = jnp.where(write, v[:, None].astype(cache_v.dtype), cache_v)
+
+    g = cfg.n_heads // k_heads
+    qg = q.reshape(b, k_heads, g, hd).astype(jnp.float32)
+    scale = hd ** -0.5
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, cache_k.astype(jnp.float32)) * scale
+    smax = cache_k.shape[1]
+    mask = jnp.arange(smax)[None] <= pos[:, None]  # (B, Smax)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, cache_v.astype(jnp.float32))
+    o = o / jnp.maximum(p.sum(-1)[..., None], 1e-30)
+    o = o.reshape(b, cfg.n_heads, hd).astype(x.dtype)
+    y = jnp.einsum("bhx,hxd->bd", o, params["wo"].astype(x.dtype))
+    return y, cache_k, cache_v

@@ -1,0 +1,129 @@
+"""Shared layers/utilities: norms, RoPE, initializers, dtype policy."""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(rng, shape, fan_in: int | None = None, dtype=jnp.float32):
+    """Truncated-normal init scaled by 1/sqrt(fan_in) (llama-style)."""
+    if fan_in is None:
+        fan_in = shape[0]
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return std * jax.random.truncated_normal(rng, -3.0, 3.0, shape, dtype)
+
+
+def embed_init(rng, shape, dtype=jnp.float32):
+    return 0.02 * jax.random.truncated_normal(rng, -3.0, 3.0, shape, dtype)
+
+
+def split_keys(rng, n: int):
+    return list(jax.random.split(rng, n))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rmsnorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (head_dim//2,), float32."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., seq, hd/2)
+    sin = jnp.sin(ang)[..., None, :]  # (..., seq, 1, hd/2)
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, d_model: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings (length, d_model)."""
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    half = d_model // 2
+    freq = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = pos * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# dtype / loss utilities
+# ---------------------------------------------------------------------------
+def as_dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[name]
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating) else a, tree
+    )
+
+
+def softmax_xent(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Token cross-entropy, safe for vocab-sharded logits.
+
+    No gather over the vocab axis (a take_along_axis on a sharded dim makes
+    GSPMD replicate the full logits): the gold logit is extracted with an
+    iota-compare mask and the LSE uses shard-local reductions + tiny
+    cross-shard all-reduces.
+    """
+    v = logits.shape[-1]
+    logits32 = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits32, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(logits32 - m), axis=-1)) + m[..., 0]
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    mask = vocab_iota == targets[..., None]
+    gold = jnp.sum(jnp.where(mask, logits32, 0.0), axis=-1)
+    return lse - gold
+
+
+def mask_vocab_pad(logits: jax.Array, cfg) -> jax.Array:
+    """-inf the pad region of padded-vocab logits (no-op when unpadded)."""
+    if cfg.padded_vocab == cfg.vocab_size:
+        return logits
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(iota < cfg.vocab_size, logits, jnp.asarray(-1e30, logits.dtype))
+
+
+def count_params(params) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))

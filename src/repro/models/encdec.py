@@ -1,0 +1,269 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` supplies
+precomputed frame embeddings (B, frontend_len, d_model).  Sinusoidal absolute
+positions on both encoder and decoder (deviation: real Whisper uses learned
+decoder positions; sinusoidal keeps parameters shape-independent so one
+param set serves every shape cell).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard_act, shard_params
+
+from . import attention as attn
+from . import mlp as mlps
+from .common import (
+    Params,
+    mask_vocab_pad,
+    as_dtype,
+    embed_init,
+    layernorm,
+    layernorm_init,
+    sinusoidal_positions,
+    softmax_xent,
+    split_keys,
+)
+
+
+def _enc_block_init(rng, cfg, dtype) -> Params:
+    k1, k2 = split_keys(rng, 2)
+    return {
+        "attn_norm": layernorm_init(cfg.d_model, dtype),
+        "attn": attn.attn_init(k1, cfg, dtype=dtype),
+        "mlp_norm": layernorm_init(cfg.d_model, dtype),
+        "mlp": mlps.mlp_init(k2, cfg, dtype=dtype),
+    }
+
+
+def _dec_block_init(rng, cfg, dtype) -> Params:
+    k1, k2, k3 = split_keys(rng, 3)
+    return {
+        "self_norm": layernorm_init(cfg.d_model, dtype),
+        "self_attn": attn.attn_init(k1, cfg, dtype=dtype),
+        "cross_norm": layernorm_init(cfg.d_model, dtype),
+        "cross_attn": attn.attn_init(k2, cfg, dtype=dtype),
+        "mlp_norm": layernorm_init(cfg.d_model, dtype),
+        "mlp": mlps.mlp_init(k3, cfg, dtype=dtype),
+    }
+
+
+def encdec_init(rng, cfg) -> Params:
+    dtype = as_dtype(cfg.param_dtype)
+    ke, kenc, kdec, kn = split_keys(rng, 4)
+    enc_keys = jnp.stack(split_keys(kenc, cfg.n_enc_layers))
+    dec_keys = jnp.stack(split_keys(kdec, cfg.n_dec_layers))
+    return {
+        "embed": embed_init(ke, (cfg.padded_vocab, cfg.d_model), dtype),
+        "enc_layers": jax.vmap(lambda k: _enc_block_init(k, cfg, dtype))(enc_keys),
+        "enc_norm": layernorm_init(cfg.d_model, dtype),
+        "dec_layers": jax.vmap(lambda k: _dec_block_init(k, cfg, dtype))(dec_keys),
+        "dec_norm": layernorm_init(cfg.d_model, dtype),
+    }
+
+
+def _enc_block(cfg, p, x, positions):
+    h = attn.attention_block(
+        p["attn"], layernorm(p["attn_norm"], x, cfg.norm_eps), cfg, positions,
+        causal=False, use_rope=False,
+    )
+    x = x + h
+    x = x + mlps.mlp(p["mlp"], layernorm(p["mlp_norm"], x, cfg.norm_eps), cfg)
+    return shard_act(x, "dp", None, None)
+
+
+def _dec_block(cfg, p, x, enc_out, positions, enc_positions):
+    h = attn.attention_block(
+        p["self_attn"], layernorm(p["self_norm"], x, cfg.norm_eps), cfg, positions,
+        causal=True, use_rope=False,
+    )
+    x = x + h
+    h = attn.attention_block(
+        p["cross_attn"], layernorm(p["cross_norm"], x, cfg.norm_eps), cfg, positions,
+        causal=False, use_rope=False, kv_x=enc_out, kv_positions=enc_positions,
+    )
+    x = x + h
+    x = x + mlps.mlp(p["mlp"], layernorm(p["mlp_norm"], x, cfg.norm_eps), cfg)
+    return shard_act(x, "dp", None, None)
+
+
+def encode(params: Params, frames: jax.Array, cfg) -> jax.Array:
+    """frames: (B, F, d) precomputed frame embeddings (conv stub output)."""
+    dt = as_dtype(cfg.dtype)
+    x = frames.astype(dt) + sinusoidal_positions(frames.shape[1], cfg.d_model).astype(dt)
+    b, f, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(f, dtype=jnp.int32), (b, f))
+
+    fn = partial(_enc_block, cfg)
+    if cfg.remat:
+        fn = jax.checkpoint(fn)
+
+    def step(x, lp):
+        return fn(lp, x, positions), None
+
+    x = _maybe_scan(cfg, step, x, params["enc_layers"], cfg.n_enc_layers)
+    return layernorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _maybe_scan(cfg, step, x, layers, n):
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(lambda c, lp: step(c, shard_params(lp, cfg)), x, layers)
+        return x
+    for i in range(n):
+        x, _ = step(x, jax.tree.map(lambda a: a[i], layers))
+    return x
+
+
+def decode_train(params: Params, tokens: jax.Array, enc_out: jax.Array, cfg) -> jax.Array:
+    dt = as_dtype(cfg.dtype)
+    b, s = tokens.shape
+    x = params["embed"].astype(dt)[tokens]
+    x = x + sinusoidal_positions(s, cfg.d_model).astype(dt)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    enc_positions = jnp.broadcast_to(
+        jnp.arange(enc_out.shape[1], dtype=jnp.int32), (b, enc_out.shape[1])
+    )
+
+    fn = partial(_dec_block, cfg)
+    if cfg.remat:
+        fn = jax.checkpoint(fn)
+
+    def step(x, lp):
+        return fn(lp, x, enc_out, positions, enc_positions), None
+
+    x = _maybe_scan(cfg, step, x, params["dec_layers"], cfg.n_dec_layers)
+    x = layernorm(params["dec_norm"], x, cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(dt))  # tied head
+    return shard_act(mask_vocab_pad(logits, cfg), "dp", None, "tp")
+
+
+def encdec_loss(params: Params, batch: dict, cfg) -> jax.Array:
+    enc_out = encode(params, batch["frontend"], cfg)
+    logits = decode_train(params, batch["tokens"], enc_out, cfg)
+    return softmax_xent(logits, batch["targets"]).mean()
+
+
+# --- serving -----------------------------------------------------------------
+def encdec_cache_specs(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    l, k, hd = cfg.n_dec_layers, cfg.n_kv_heads, cfg.head_dim
+    f = cfg.frontend_len
+    return {
+        "self_k": jax.ShapeDtypeStruct((l, batch, max_len, k, hd), dtype),
+        "self_v": jax.ShapeDtypeStruct((l, batch, max_len, k, hd), dtype),
+        "cross_k": jax.ShapeDtypeStruct((l, batch, f, k, hd), dtype),
+        "cross_v": jax.ShapeDtypeStruct((l, batch, f, k, hd), dtype),
+    }
+
+
+def encdec_init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda sd: jnp.zeros(sd.shape, sd.dtype),
+        encdec_cache_specs(cfg, batch, max_len, dtype),
+    )
+
+
+def encdec_prefill(params: Params, frames: jax.Array, tokens: jax.Array, cfg, max_len: int):
+    """Encode + teacher-forced decoder pass building self+cross KV caches."""
+    dt = as_dtype(cfg.dtype)
+    enc_out = encode(params, frames, cfg)
+    b, s = tokens.shape
+
+    # cross KV is position-independent: precompute per layer
+    def cross_kv(lp):
+        k = jnp.einsum("bfd,dkx->bfkx", enc_out, lp["cross_attn"]["wk"].astype(dt))
+        v = jnp.einsum("bfd,dkx->bfkx", enc_out, lp["cross_attn"]["wv"].astype(dt))
+        if "bk" in lp["cross_attn"]:
+            k = k + lp["cross_attn"]["bk"].astype(dt)
+            v = v + lp["cross_attn"]["bv"].astype(dt)
+        return k, v
+
+    x = params["embed"].astype(dt)[tokens]
+    x = x + sinusoidal_positions(s, cfg.d_model).astype(dt)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    enc_positions = jnp.broadcast_to(
+        jnp.arange(enc_out.shape[1], dtype=jnp.int32), (b, enc_out.shape[1])
+    )
+
+    def step(x, lp):
+        xin = layernorm(lp["self_norm"], x, cfg.norm_eps)
+        q, k, v = attn.qkv_proj(lp["self_attn"], xin, cfg)
+        o = attn.attention_impl(cfg)(q, k, v, causal=True)
+        x = x + attn.out_proj(lp["self_attn"], o, x.dtype)
+        h = attn.attention_block(
+            lp["cross_attn"], layernorm(lp["cross_norm"], x, cfg.norm_eps), cfg,
+            positions, causal=False, use_rope=False, kv_x=enc_out,
+            kv_positions=enc_positions,
+        )
+        x = x + h
+        x = x + mlps.mlp(lp["mlp"], layernorm(lp["mlp_norm"], x, cfg.norm_eps), cfg)
+        ck, cv = cross_kv(lp)
+        return x, (k, v, ck, cv)
+
+    if cfg.scan_layers:
+        x, (ks, vs, cks, cvs) = jax.lax.scan(step, x, params["dec_layers"])
+    else:
+        acc = []
+        for i in range(cfg.n_dec_layers):
+            x, o = step(x, jax.tree.map(lambda a: a[i], params["dec_layers"]))
+            acc.append(o)
+        ks, vs, cks, cvs = (jnp.stack([a[j] for a in acc]) for j in range(4))
+    x = layernorm(params["dec_norm"], x, cfg.norm_eps)
+    last = mask_vocab_pad(jnp.einsum("bd,vd->bv", x[:, -1], params["embed"].astype(dt)), cfg)
+
+    cache = encdec_init_cache(cfg, b, max_len, jnp.bfloat16 if cfg.dtype == "bfloat16" else dt)
+    cache["self_k"] = jax.lax.dynamic_update_slice(
+        cache["self_k"], ks.astype(cache["self_k"].dtype), (0, 0, 0, 0, 0)
+    )
+    cache["self_v"] = jax.lax.dynamic_update_slice(
+        cache["self_v"], vs.astype(cache["self_v"].dtype), (0, 0, 0, 0, 0)
+    )
+    cache["cross_k"] = cks.astype(cache["cross_k"].dtype)
+    cache["cross_v"] = cvs.astype(cache["cross_v"].dtype)
+    return last, cache
+
+
+def encdec_decode_step(params: Params, cache: dict, tokens: jax.Array, pos: jax.Array, cfg):
+    dt = as_dtype(cfg.dtype)
+    b = tokens.shape[0]
+    x = params["embed"].astype(dt)[tokens]
+    smax = cache["self_k"].shape[2]
+    pe = sinusoidal_positions(smax, cfg.d_model).astype(dt)
+    x = x + pe[pos]
+
+    def step(x, inp):
+        lp, sk, sv, ck, cv = inp
+        xin = layernorm(lp["self_norm"], x, cfg.norm_eps)
+        h, sk, sv = attn.decode_attention(
+            lp["self_attn"], xin, cfg, sk, sv, pos, use_rope=False
+        )
+        x = x + h
+        xin = layernorm(lp["cross_norm"], x, cfg.norm_eps)
+        # cross attention: static KV, attend over all frontend positions
+        fpos = jnp.full((b,), ck.shape[1] - 1, jnp.int32)
+        h, _, _ = attn.decode_attention(
+            lp["cross_attn"], xin, cfg, ck, cv, fpos, use_rope=False, update_cache=False
+        )
+        x = x + h
+        x = x + mlps.mlp(lp["mlp"], layernorm(lp["mlp_norm"], x[:, None], cfg.norm_eps), cfg)[:, 0]
+        return x, (sk, sv)
+
+    scan_in = (params["dec_layers"], cache["self_k"], cache["self_v"],
+               cache["cross_k"], cache["cross_v"])
+    if cfg.scan_layers:
+        x, (sks, svs) = jax.lax.scan(step, x, scan_in)
+    else:
+        acc = []
+        for i in range(cfg.n_dec_layers):
+            x, o = step(x, jax.tree.map(lambda a: a[i], scan_in))
+            acc.append(o)
+        sks, svs = (jnp.stack([a[j] for a in acc]) for j in range(2))
+    x = layernorm(params["dec_norm"], x[:, None], cfg.norm_eps)[:, 0]
+    logits = mask_vocab_pad(jnp.einsum("bd,vd->bv", x, params["embed"].astype(dt)), cfg)
+    return logits, {
+        "self_k": sks, "self_v": svs,
+        "cross_k": cache["cross_k"], "cross_v": cache["cross_v"],
+    }

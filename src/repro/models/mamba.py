@@ -1,0 +1,414 @@
+"""Mamba2 (SSD — state-space dual) blocks + the Zamba2 hybrid LM.
+
+Chunked SSD: within-chunk parallel (decay-masked C·B scores) + cross-chunk
+state scan; exact single-step recurrence for decode.  The per-chunk core is
+mirrored by the Pallas kernel in ``repro.kernels.ssm_scan``.
+
+Zamba2 layout (see configs/zamba2_7b.py): 13 scanned super-units of
+[shared-attn + 6 Mamba2 layers] + tail [shared-attn + 3 Mamba2 layers]
+= 81 SSM layers, 14 shared-attention applications.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard_act, shard_params
+
+from . import attention as attn
+from . import mlp as mlps
+from .common import (
+    Params,
+    as_dtype,
+    dense_init,
+    embed_init,
+    rmsnorm,
+    rmsnorm_init,
+    softmax_xent,
+    split_keys,
+)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+def mamba_dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = d_in // cfg.ssm_head_dim
+    conv_dim = d_in + 2 * cfg.ssm_state
+    return d_in, n_heads, conv_dim
+
+
+def mamba_init(rng, cfg, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    d_in, h, conv_dim = mamba_dims(cfg)
+    n = cfg.ssm_state
+    k1, k2, k3, k4, k5 = split_keys(rng, 5)
+    return {
+        "norm": rmsnorm_init(d, dtype),
+        "w_in": dense_init(k1, (d, d_in), dtype=dtype),
+        "w_z": dense_init(k2, (d, d_in), dtype=dtype),
+        "w_bc": dense_init(k3, (d, 2 * n), dtype=dtype),
+        "w_dt": dense_init(k4, (d, h), dtype=dtype),
+        "dt_bias": jnp.zeros((h,), dtype),
+        "A_log": jnp.zeros((h,), dtype),  # A = -exp(A_log) = -1
+        "D": jnp.ones((h,), dtype),
+        "conv_w": 0.1 * jax.random.normal(k5, (cfg.ssm_conv_width, conv_dim), dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "out_norm": rmsnorm_init(d_in, dtype),
+        "w_out": dense_init(k5, (d_in, d), fan_in=d_in, dtype=dtype),
+    }
+
+
+def _causal_conv(xw: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv.  xw (B,S,C), w (W,C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xw, ((0, 0), (width - 1, 0), (0, 0)))
+    s = xw.shape[1]
+    out = sum(pad[:, i : i + s, :] * w[i] for i in range(width))
+    return jax.nn.silu(out + b)
+
+
+def _conv_step(x_t: jax.Array, conv_state: jax.Array, w: jax.Array, b: jax.Array):
+    """Single-token conv.  x_t (B,C); conv_state (B,W-1,C)."""
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,W,C)
+    out = jnp.einsum("bwc,wc->bc", window, w)
+    return jax.nn.silu(out + b), window[:, 1:, :]
+
+
+def ssd_chunked(u, a_log, B_, C_, h0, chunk: int):
+    """Chunked SSD scan.
+
+    u (B,S,H,P) dt-scaled inputs; a_log (B,S,H) per-step log decay (<=0);
+    B_/C_ (B,S,N); h0 (B,H,P,N).  Returns (y (B,S,H,P), h_final).
+    """
+    b, s, h, p = u.shape
+    n = B_.shape[-1]
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+
+    uc = u.reshape(b, nc, chunk, h, p).transpose(1, 0, 2, 3, 4)
+    ac = a_log.reshape(b, nc, chunk, h).transpose(1, 0, 2, 3).astype(jnp.float32)
+    bc = B_.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)
+    cc = C_.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))
+
+    def body(hprev, inp):
+        u_j, a_j, b_j, c_j = inp  # (B,L,H,P) (B,L,H) (B,L,N) (B,L,N)
+        acum = jnp.cumsum(a_j, axis=1)  # (B,L,H) decay chunk-start..t
+        atot = acum[:, -1:, :]  # (B,1,H)
+        # intra-chunk
+        cb = jnp.einsum("bln,bmn->blm", c_j.astype(jnp.float32), b_j.astype(jnp.float32))
+        decay = jnp.exp(
+            jnp.clip(acum[:, :, None, :] - acum[:, None, :, :], -60.0, 0.0)
+        )  # (B,L,M,H): exp(A_t - A_s)
+        w = cb[..., None] * decay * tri[None, :, :, None]
+        y_intra = jnp.einsum("blmh,bmhp->blhp", w, u_j.astype(jnp.float32))
+        # inter-chunk (state contribution)
+        y_inter = jnp.einsum("bln,bhpn->blhp", c_j.astype(jnp.float32), hprev) * jnp.exp(
+            acum
+        ).transpose(0, 1, 2)[..., None]
+        # new state
+        sdecay = jnp.exp(jnp.clip(atot - acum, -60.0, 0.0))  # (B,L,H)
+        h_new = hprev * jnp.exp(atot).transpose(0, 2, 1)[..., None] + jnp.einsum(
+            "bln,blh,blhp->bhpn", b_j.astype(jnp.float32), sdecay, u_j.astype(jnp.float32)
+        )
+        return h_new, y_intra + y_inter
+
+    h_final, yc = jax.lax.scan(body, h0.astype(jnp.float32), (uc, ac, bc, cc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(b, nc * chunk, h, p)
+    return y[:, :s].astype(u.dtype), h_final
+
+
+def mamba_forward(p: Params, x: jax.Array, cfg, h0=None, return_state: bool = False):
+    """Full-sequence Mamba2 block (no residual).  x (B,S,d)."""
+    bsz, s, d = x.shape
+    d_in, h, conv_dim = mamba_dims(cfg)
+    n, pd = cfg.ssm_state, cfg.ssm_head_dim
+    dt = x.dtype
+
+    xin = x @ p["w_in"].astype(dt)
+    z = x @ p["w_z"].astype(dt)
+    bc = x @ p["w_bc"].astype(dt)
+    dt_raw = (x @ p["w_dt"].astype(dt)).astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    delta = jax.nn.softplus(dt_raw)  # (B,S,H)
+
+    conv_in = jnp.concatenate([xin, bc], axis=-1)
+    conv_out = _causal_conv(conv_in, p["conv_w"].astype(dt), p["conv_b"].astype(dt))
+    xin, b_, c_ = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+
+    xh = xin.reshape(bsz, s, h, pd)
+    a_log = -jnp.exp(p["A_log"].astype(jnp.float32))[None, None] * delta  # (B,S,H)
+    u = xh * delta.astype(dt)[..., None]
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, pd, n), jnp.float32)
+    y, h_final = ssd_chunked(u, a_log, b_, c_, h0, cfg.ssm_chunk)
+    y = y + xh * p["D"].astype(dt)[None, None, :, None]
+    y = y.reshape(bsz, s, d_in)
+    y = rmsnorm(p["out_norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    out = y @ p["w_out"].astype(dt)
+    if return_state:
+        return out, h_final
+    return out
+
+
+def mamba_decode(p: Params, x: jax.Array, cfg, ssm_state, conv_state):
+    """Single-token Mamba2 step.  x (B,d); returns (y, ssm_state, conv_state)."""
+    bsz, d = x.shape
+    d_in, h, conv_dim = mamba_dims(cfg)
+    n, pd = cfg.ssm_state, cfg.ssm_head_dim
+    dt = x.dtype
+
+    xin = x @ p["w_in"].astype(dt)
+    z = x @ p["w_z"].astype(dt)
+    bc = x @ p["w_bc"].astype(dt)
+    delta = jax.nn.softplus(
+        (x @ p["w_dt"].astype(dt)).astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )  # (B,H)
+
+    conv_in = jnp.concatenate([xin, bc], axis=-1)
+    conv_out, conv_state = _conv_step(conv_in, conv_state, p["conv_w"].astype(dt), p["conv_b"].astype(dt))
+    xin, b_, c_ = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+
+    xh = xin.reshape(bsz, h, pd).astype(jnp.float32)
+    decay = jnp.exp(-jnp.exp(p["A_log"].astype(jnp.float32))[None] * delta)  # (B,H)
+    u = xh * delta[..., None]
+    ssm_state = ssm_state * decay[..., None, None] + jnp.einsum(
+        "bn,bhp->bhpn", b_.astype(jnp.float32), u
+    )
+    y = jnp.einsum("bn,bhpn->bhp", c_.astype(jnp.float32), ssm_state)
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(bsz, d_in).astype(dt)
+    y = rmsnorm(p["out_norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    return y @ p["w_out"].astype(dt), ssm_state, conv_state
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid LM
+# ---------------------------------------------------------------------------
+def _zamba_counts(cfg):
+    """(n_super, mamba_per_super, tail_layers)."""
+    per = cfg.macro_size * cfg.attn_every_k_macro  # 6
+    n_super = cfg.n_layers // per  # 13
+    tail = cfg.n_layers - n_super * per  # 3
+    return n_super, per, tail
+
+
+def _shared_attn_init(rng, cfg, dtype) -> Params:
+    """Shared transformer block taking concat(x, x0) = 2d input."""
+    k1, k2 = split_keys(rng, 2)
+    return {
+        "norm": rmsnorm_init(2 * cfg.d_model, dtype),
+        "attn": attn.attn_init(k1, cfg, d_in=2 * cfg.d_model, dtype=dtype),
+        "mlp_norm": rmsnorm_init(cfg.d_model, dtype),
+        "mlp": mlps.mlp_init(k2, cfg, dtype=dtype),
+    }
+
+
+def zamba_init(rng, cfg) -> Params:
+    dtype = as_dtype(cfg.param_dtype)
+    n_super, per, tail = _zamba_counts(cfg)
+    ke, ks, kt, ka, kh = split_keys(rng, 5)
+
+    def stack_init(k, n):
+        keys = jnp.stack(split_keys(k, n))
+        return jax.vmap(lambda kk: mamba_init(kk, cfg, dtype))(keys)
+
+    super_keys = jnp.stack(split_keys(ks, n_super))
+    supers = jax.vmap(lambda kk: stack_init(kk, per))(super_keys)  # (n_super, per, ...)
+    p = {
+        "embed": embed_init(ke, (cfg.padded_vocab, cfg.d_model), dtype),
+        "supers": supers,
+        "shared_attn": _shared_attn_init(ka, cfg, dtype),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+        "lm_head": embed_init(kh, (cfg.d_model, cfg.padded_vocab), dtype),
+    }
+    if tail:
+        p["tail"] = stack_init(kt, tail)
+    return p
+
+
+def _shared_attn_apply(cfg, p: Params, x, x0, positions):
+    cat = jnp.concatenate([x, x0], axis=-1)
+    h = attn.attention_block(
+        p["attn"], rmsnorm(p["norm"], cat, cfg.norm_eps), cfg, positions, causal=True
+    )
+    x = x + h
+    x = x + mlps.mlp(p["mlp"], rmsnorm(p["mlp_norm"], x, cfg.norm_eps), cfg)
+    return shard_act(x, "dp", None, None)
+
+
+def _shared_attn_decode(cfg, p: Params, x, x0, ck, cv, pos):
+    cat = jnp.concatenate([x, x0], axis=-1)
+    h, ck, cv = attn.decode_attention(
+        p["attn"], rmsnorm(p["norm"], cat, cfg.norm_eps), cfg, ck, cv, pos
+    )
+    x = x + h
+    x = x + mlps.mlp(p["mlp"], rmsnorm(p["mlp_norm"], x, cfg.norm_eps), cfg)
+    return x, ck, cv
+
+
+def _mamba_residual(cfg, p, x, h0=None, return_state=False):
+    xin = rmsnorm(p["norm"], x, cfg.norm_eps)
+    if return_state:
+        y, h = mamba_forward(p, xin, cfg, h0=h0, return_state=True)
+        return x + y, h
+    return x + mamba_forward(p, xin, cfg)
+
+
+def zamba_forward(params: Params, tokens: jax.Array, cfg):
+    """tokens (B,S) -> logits (B,S,V)."""
+    dt = as_dtype(cfg.dtype)
+    x = params["embed"].astype(dt)[tokens]
+    x = shard_act(x, "dp", None, None)
+    x0 = x
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    n_super, per, tail = _zamba_counts(cfg)
+
+    mamba_res = partial(_mamba_residual, cfg)
+    if cfg.remat:
+        mamba_res = jax.checkpoint(mamba_res, static_argnums=())
+
+    def super_step(x, sp):
+        sp = shard_params(sp, cfg)
+        x = _shared_attn_apply(cfg, params["shared_attn"], x, x0, positions)
+
+        def layer_step(x, lp):
+            return mamba_res(lp, x), None
+
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(layer_step, x, sp)
+        else:
+            for i in range(per):
+                x, _ = layer_step(x, jax.tree.map(lambda a: a[i], sp))
+        return x, None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(super_step, x, params["supers"])
+    else:
+        for i in range(n_super):
+            x, _ = super_step(x, jax.tree.map(lambda a: a[i], params["supers"]))
+    if tail:  # one more shared-attn + remaining mamba layers
+        x = _shared_attn_apply(cfg, params["shared_attn"], x, x0, positions)
+
+        def layer_step(x, lp):
+            return mamba_res(lp, x), None
+
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(layer_step, x, params["tail"])
+        else:
+            for i in range(tail):
+                x, _ = layer_step(x, jax.tree.map(lambda a: a[i], params["tail"]))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(dt))
+    return shard_act(logits, "dp", None, "tp")
+
+
+def zamba_loss(params: Params, batch: dict, cfg) -> jax.Array:
+    logits = zamba_forward(params, batch["tokens"], cfg)
+    return softmax_xent(logits, batch["targets"]).mean()
+
+
+# --- serving -----------------------------------------------------------------
+def zamba_cache_specs(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    n_super, per, tail = _zamba_counts(cfg)
+    d_in, h, conv_dim = mamba_dims(cfg)
+    n_attn = n_super + (1 if tail else 0)
+    n_ssm = cfg.n_layers
+    kv = (n_attn, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jax.ShapeDtypeStruct(kv, dtype),
+        "v": jax.ShapeDtypeStruct(kv, dtype),
+        "ssm": jax.ShapeDtypeStruct(
+            (n_ssm, batch, h, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+        ),
+        "conv": jax.ShapeDtypeStruct(
+            (n_ssm, batch, cfg.ssm_conv_width - 1, conv_dim), dtype
+        ),
+        "x0": jax.ShapeDtypeStruct((batch, cfg.d_model), dtype),
+    }
+
+
+def zamba_init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda sd: jnp.zeros(sd.shape, sd.dtype), zamba_cache_specs(cfg, batch, max_len, dtype)
+    )
+
+
+def zamba_decode_step(params: Params, cache: dict, tokens: jax.Array, pos: jax.Array, cfg):
+    """One decode step.  Scanned over super-units (attn + `per` mamba layers)
+    for compact HLO; the tail unit (attn + remaining layers) is explicit.
+    x0 (residual embedding stream) is the current token's embedding."""
+    dt = as_dtype(cfg.dtype)
+    x = params["embed"].astype(dt)[tokens]
+    x0 = x  # zamba concatenates the original embedding stream
+    n_super, per, tail = _zamba_counts(cfg)
+
+    n_main = n_super * per
+    ssm_main = cache["ssm"][:n_main].reshape((n_super, per) + cache["ssm"].shape[1:])
+    conv_main = cache["conv"][:n_main].reshape((n_super, per) + cache["conv"].shape[1:])
+    ks, vs = cache["k"], cache["v"]
+
+    def mamba_step(x, lin):
+        lp, s_st, c_st = lin
+        xin = rmsnorm(lp["norm"], x, cfg.norm_eps)
+        y, s_new, c_new = mamba_decode(lp, xin, cfg, s_st, c_st)
+        return x + y, (s_new, c_new)
+
+    def super_step(x, inp):
+        sp, ck, cv, s_st, c_st = inp
+        x, ck, cv = _shared_attn_decode(cfg, params["shared_attn"], x, x0, ck, cv, pos)
+        if cfg.scan_layers:
+            x, (s_new, c_new) = jax.lax.scan(mamba_step, x, (sp, s_st, c_st))
+        else:
+            acc = []
+            for i in range(per):
+                x, o = mamba_step(x, jax.tree.map(lambda a: a[i], (sp, s_st, c_st)))
+                acc.append(o)
+            s_new = jnp.stack([a[0] for a in acc])
+            c_new = jnp.stack([a[1] for a in acc])
+        return x, (ck, cv, s_new, c_new)
+
+    scan_in = (params["supers"], ks[:n_super], vs[:n_super], ssm_main, conv_main)
+    if cfg.scan_layers:
+        x, (nk, nv, nssm, nconv) = jax.lax.scan(super_step, x, scan_in)
+    else:
+        acc = []
+        for i in range(n_super):
+            x, o = super_step(x, jax.tree.map(lambda a: a[i], scan_in))
+            acc.append(o)
+        nk, nv, nssm, nconv = (jnp.stack([a[j] for a in acc]) for j in range(4))
+
+    nssm = nssm.reshape((n_main,) + nssm.shape[2:])
+    nconv = nconv.reshape((n_main,) + nconv.shape[2:])
+
+    if tail:
+        x, ckt, cvt = _shared_attn_decode(
+            cfg, params["shared_attn"], x, x0, ks[n_super], vs[n_super], pos
+        )
+        t_ssm, t_conv = [], []
+        for lj in range(tail):
+            lp = jax.tree.map(lambda a: a[lj], params["tail"])
+            x, (s_new, c_new) = mamba_step(x, (lp, cache["ssm"][n_main + lj],
+                                               cache["conv"][n_main + lj]))
+            t_ssm.append(s_new)
+            t_conv.append(c_new)
+        nk = jnp.concatenate([nk, ckt[None]], axis=0)
+        nv = jnp.concatenate([nv, cvt[None]], axis=0)
+        nssm = jnp.concatenate([nssm, jnp.stack(t_ssm)], axis=0)
+        nconv = jnp.concatenate([nconv, jnp.stack(t_conv)], axis=0)
+
+    x = rmsnorm(params["final_norm"], x[:, None], cfg.norm_eps)[:, 0]
+    logits = x @ params["lm_head"].astype(dt)
+    cache = {"k": nk, "v": nv, "ssm": nssm, "conv": nconv, "x0": x0}
+    return logits, cache

@@ -1,0 +1,170 @@
+"""MLP variants (swiglu / geglu / gelu) and the MoE block.
+
+MoE uses the sort-free scatter dispatch: top-k routing, position-within-expert
+via one-hot cumsum, capacity-bounded scatter into an (E, C, d) buffer, batched
+expert matmuls, weighted scatter-combine.  Experts shard on the ``model`` mesh
+axis (EP) by default; ``cfg.moe_shard == "ffn"`` instead TP-shards d_ff.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard_act
+
+from .common import Params, dense_init, split_keys
+
+
+# ---------------------------------------------------------------------------
+# dense MLP
+# ---------------------------------------------------------------------------
+def mlp_init(rng, cfg, d_in: int | None = None, dtype=jnp.float32) -> Params:
+    d = d_in if d_in is not None else cfg.d_model
+    f = cfg.d_ff
+    if cfg.mlp_variant in ("swiglu", "geglu"):
+        k1, k2, k3 = split_keys(rng, 3)
+        return {
+            "wi_gate": dense_init(k1, (d, f), dtype=dtype),
+            "wi_up": dense_init(k2, (d, f), dtype=dtype),
+            "wo": dense_init(k3, (f, cfg.d_model), fan_in=f, dtype=dtype),
+        }
+    k1, k2 = split_keys(rng, 2)
+    return {
+        "wi": dense_init(k1, (d, f), dtype=dtype),
+        "wo": dense_init(k2, (f, cfg.d_model), fan_in=f, dtype=dtype),
+    }
+
+
+def _act(cfg, x):
+    if cfg.mlp_variant == "swiglu":
+        return jax.nn.silu(x)
+    return jax.nn.gelu(x, approximate=True)
+
+
+def mlp(params: Params, x: jax.Array, cfg) -> jax.Array:
+    dt = x.dtype
+    if "wi_gate" in params:
+        g = _act(cfg, x @ params["wi_gate"].astype(dt))
+        u = x @ params["wi_up"].astype(dt)
+        return (g * u) @ params["wo"].astype(dt)
+    h = _act(cfg, x @ params["wi"].astype(dt))
+    return h @ params["wo"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+def moe_init(rng, cfg, dtype=jnp.float32) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    kr, k1, k2, k3 = split_keys(rng, 4)
+    return {
+        "router": dense_init(kr, (d, e), dtype=dtype),
+        "wi_gate": dense_init(k1, (e, d, f), fan_in=d, dtype=dtype),
+        "wi_up": dense_init(k2, (e, d, f), fan_in=d, dtype=dtype),
+        "wo": dense_init(k3, (e, f, d), fan_in=f, dtype=dtype),
+    }
+
+
+def moe_capacity(cfg, tokens: int) -> int:
+    """Per-expert capacity over a token group."""
+    cap = int(tokens * cfg.experts_per_token * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-cap // 8) * 8)  # round up to 8
+
+
+def moe_block(params: Params, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux_loss).
+
+    Group-local capacity-bounded dispatch (GShard semantics): each batch row
+    is a routing group, so positions/capacity are computed per-group with a
+    sequence-length-long cumsum that stays LOCAL under data-parallel batch
+    sharding — dispatch buffers are (B, E, C, d), sharded batch-on-dp and
+    expert-on-model, never global-token-sized.  Over-capacity assignments
+    drop (capacity_factor 1.25).
+    """
+    dt = x.dtype
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+
+    logits = (x @ params["router"].astype(dt)).astype(jnp.float32)  # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)  # (B, S, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch-style), computed globally
+    me = probs.mean(axis=(0, 1))  # (E,)
+    ce = jnp.sum(
+        jax.nn.one_hot(top_e, e, dtype=jnp.float32), axis=(0, 1, 2)
+    ) / (b * s * k)
+    aux = e * jnp.sum(me * ce)
+
+    cap = moe_capacity(cfg, s)
+    # pin dispatch tensors expert-sharded for full sequences only — for
+    # single-token decode the tensors are tiny and ANY pin forces harmful
+    # resharding (measured +6x memory term in §Perf)
+    pin = cfg.moe_shard == "expert" and s > 1
+
+    def _pin(a, *axes):
+        return shard_act(a, *axes) if pin else a
+
+    flat_e = top_e.reshape(b, s * k)  # (B, S*k) expert id per assignment
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # (B, S*k, E)
+    # keep the (big) one-hot/position tensors expert-sharded: without the
+    # pin, GSPMD replicates the S*k x E cumsum across the model axis and the
+    # dispatch collectives dwarf the expert math (measured in §Perf)
+    onehot = _pin(onehot, "dp", None, "tp")
+    pos_in_e = (jnp.cumsum(onehot, axis=1) - 1) * onehot
+    pos_in_e = _pin(pos_in_e, "dp", None, "tp")
+    pos = pos_in_e.sum(-1)  # (B, S*k) slot within (group, expert)
+    keep = pos < cap
+    dump = jnp.where(keep, pos, cap)  # dropped -> scratch slot `cap`
+
+    # scatter tokens into (B, E, C+1, d).  vmap over the group dim keeps the
+    # batch a true scatter-batching dim, so GSPMD shards it on dp instead of
+    # replicating the operand (explicit batch index arrays defeat it).
+    xr = jnp.repeat(x, k, axis=1)  # (B, S*k, d): token value per assignment
+
+    def scatter_one(xg, eg, pg):
+        return jnp.zeros((e, cap + 1, d), dt).at[eg, pg].set(xg)
+
+    buf = jax.vmap(scatter_one)(xr, flat_e, dump)[:, :, :cap]  # (B, E, C, d)
+    buf = _pin(buf, "dp", "tp", None, None)
+
+    g = _act(cfg, jnp.einsum("becd,edf->becf", buf, params["wi_gate"].astype(dt)))
+    u = jnp.einsum("becd,edf->becf", buf, params["wi_up"].astype(dt))
+    out = jnp.einsum("becf,efd->becd", g * u, params["wo"].astype(dt))  # (B,E,C,d)
+    out = _pin(out, "dp", "tp", None, None)
+
+    out = jnp.pad(out, ((0, 0), (0, 0), (0, 1), (0, 0)))  # scratch slot reads 0
+    gathered = jax.vmap(lambda og, eg, pg: og[eg, pg])(out, flat_e, dump)  # (B,S*k,d)
+    # (B, S*k, d) -> (B, S, k, d); combine with renormalized router weights
+    gathered = gathered.reshape(b, s, k, d)
+    w = (top_p * keep.reshape(b, s, k)).astype(dt)  # (B, S, k)
+    y = jnp.einsum("bskd,bsk->bsd", gathered, w)
+    return y, aux
+
+
+def moe_block_dense(params: Params, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
+    """Reference MoE: every token through every expert, mask-combined.
+
+    O(T * E * d * f) compute — exact (no drops), used as the oracle in tests
+    when capacity is ample.
+    """
+    dt = x.dtype
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    xf = x.reshape(-1, d)
+    logits = (xf @ params["router"].astype(dt)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    comb = jnp.zeros_like(probs).at[jnp.arange(xf.shape[0])[:, None], top_e].set(top_p)
+
+    g = _act(cfg, jnp.einsum("td,edf->tef", xf, params["wi_gate"].astype(dt)))
+    u = jnp.einsum("td,edf->tef", xf, params["wi_up"].astype(dt))
+    o = jnp.einsum("tef,efd->ted", g * u, params["wo"].astype(dt))
+    y = jnp.einsum("ted,te->td", o, comb.astype(dt))
+
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((e,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / top_e.size
+    aux = e * jnp.sum(me * ce)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,274 @@
+"""Unified decoder-only transformer LM: dense (gemma/qwen/minitron/yi),
+MoE (olmoe/dbrx), and VLM backbone (internvl2, stub vision frontend).
+
+Layers are stacked and scanned (compact HLO; remat at layer granularity).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard_act, shard_params
+
+from . import attention as attn
+from . import mlp as mlps
+from .common import (
+    Params,
+    as_dtype,
+    embed_init,
+    rmsnorm,
+    rmsnorm_init,
+    softmax_xent,
+    split_keys,
+)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _block_init(rng, cfg, dtype) -> Params:
+    k1, k2 = split_keys(rng, 2)
+    p: Params = {
+        "attn_norm": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn.attn_init(k1, cfg, dtype=dtype),
+        "mlp_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if cfg.family == "moe":
+        p["moe"] = mlps.moe_init(k2, cfg, dtype=dtype)
+    else:
+        p["mlp"] = mlps.mlp_init(k2, cfg, dtype=dtype)
+    return p
+
+
+def lm_init(rng, cfg) -> Params:
+    dtype = as_dtype(cfg.param_dtype)
+    ke, kl, kh = split_keys(rng, 3)
+    layer_keys = jnp.stack(split_keys(kl, cfg.n_layers))
+    layers = jax.vmap(lambda k: _block_init(k, cfg, dtype))(layer_keys)
+    p: Params = {
+        "embed": embed_init(ke, (cfg.padded_vocab, cfg.d_model), dtype),
+        "layers": layers,
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = embed_init(kh, (cfg.d_model, cfg.padded_vocab), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+def _block_apply(cfg, p: Params, x: jax.Array, positions: jax.Array):
+    """Pre-norm block. x: (B,S,d). Returns (x, aux)."""
+    h = attn.attention_block(
+        p["attn"], rmsnorm(p["attn_norm"], x, cfg.norm_eps), cfg, positions, causal=True
+    )
+    x = x + h
+    x = shard_act(x, "dp", "sp", None)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "moe":
+        y, aux = mlps.moe_block(p["moe"], rmsnorm(p["mlp_norm"], x, cfg.norm_eps), cfg)
+    else:
+        y = mlps.mlp(p["mlp"], rmsnorm(p["mlp_norm"], x, cfg.norm_eps), cfg)
+    x = x + y
+    x = shard_act(x, "dp", "sp", None)
+    return x, aux
+
+
+def _block_prefill(cfg, p: Params, x: jax.Array, positions: jax.Array):
+    """Like _block_apply but also returns this layer's (k, v) for the cache."""
+    xin = rmsnorm(p["attn_norm"], x, cfg.norm_eps)
+    q, k, v = attn.qkv_proj(p["attn"], xin, cfg)
+    from .common import apply_rope
+
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = attn.attention_impl(cfg)(q, k, v, causal=True)
+    x = x + attn.out_proj(p["attn"], o, x.dtype)
+    x = shard_act(x, "dp", "sp", None)
+    if cfg.family == "moe":
+        y, _ = mlps.moe_block(p["moe"], rmsnorm(p["mlp_norm"], x, cfg.norm_eps), cfg)
+    else:
+        y = mlps.mlp(p["mlp"], rmsnorm(p["mlp_norm"], x, cfg.norm_eps), cfg)
+    x = x + y
+    x = shard_act(x, "dp", "sp", None)
+    return x, (k, v)
+
+
+def _block_decode(cfg, p: Params, x: jax.Array, ck, cv, pos):
+    """Single-token decode block. x: (B,d)."""
+    xin = rmsnorm(p["attn_norm"], x, cfg.norm_eps)
+    h, ck, cv = attn.decode_attention(p["attn"], xin, cfg, ck, cv, pos)
+    x = x + h
+    xin = rmsnorm(p["mlp_norm"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        y, _ = mlps.moe_block(p["moe"], xin[:, None, :], cfg)
+        y = y[:, 0]
+    else:
+        y = mlps.mlp(p["mlp"], xin, cfg)
+    x = x + y
+    x = shard_act(x, "dp", None)
+    return x, ck, cv
+
+
+# ---------------------------------------------------------------------------
+# embeddings / logits
+# ---------------------------------------------------------------------------
+def embed_tokens(params: Params, tokens: jax.Array, cfg, frontend: Optional[jax.Array]):
+    dt = as_dtype(cfg.dtype)
+    x = params["embed"].astype(dt)[tokens]
+    if cfg.family in ("dense", "moe"):
+        pass
+    if frontend is not None:  # VLM: prepend patch embeddings
+        x = jnp.concatenate([frontend.astype(dt), x], axis=1)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model**0.5, dt)
+    return x
+
+
+def lm_logits(params: Params, x: jax.Array, cfg) -> jax.Array:
+    dt = x.dtype
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(dt))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(dt))
+    if cfg.padded_vocab != cfg.vocab_size:  # mask pad slots
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        logits = jnp.where(iota < cfg.vocab_size, logits, jnp.asarray(-1e30, logits.dtype))
+    if cfg.logits_parallel:
+        logits = shard_act(logits, "dp", None, "tp")
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+def _remat_policy(cfg):
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return None  # recompute everything
+
+
+def _scan_blocks(cfg, layers: Params, x, positions, block_fn):
+    fn = partial(block_fn, cfg)
+    if cfg.remat:
+        fn = jax.checkpoint(fn, policy=_remat_policy(cfg))
+    has_aux = cfg.family == "moe"  # dense: keep the scan carry single-tensor
+
+    def step(carry, lp):
+        x, aux = carry if has_aux else (carry, None)
+        lp = shard_params(lp, cfg)  # pin sliced params (and their grads)
+        x, a = fn(lp, x, positions)
+        if has_aux:
+            return (x, aux + jnp.sum(a)), None
+        return x, None
+
+    if cfg.scan_layers:
+        if has_aux:
+            (x, aux), _ = jax.lax.scan(step, (x, jnp.zeros((), jnp.float32)), layers)
+        else:
+            x, _ = jax.lax.scan(step, x, layers)
+            aux = jnp.zeros((), jnp.float32)
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], layers)
+            x, a = fn(lp, x, positions)
+            aux = aux + jnp.sum(a)
+    return x, aux
+
+
+def lm_forward(params: Params, tokens: jax.Array, cfg, frontend=None):
+    """tokens (B,S_text) -> logits (B,S,V), aux.  S = S_text (+frontend)."""
+    x = embed_tokens(params, tokens, cfg, frontend)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = shard_act(x, "dp", "sp", None)
+    x, aux = _scan_blocks(cfg, params["layers"], x, positions, _block_apply)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return lm_logits(params, x, cfg), aux
+
+
+def lm_loss(params: Params, batch: dict, cfg) -> jax.Array:
+    frontend = batch.get("frontend")
+    logits, aux = lm_forward(params, batch["tokens"], cfg, frontend)
+    targets = batch["targets"]
+    if frontend is not None:  # loss only over the text span
+        logits = logits[:, frontend.shape[1]:]
+    loss = softmax_xent(logits, targets).mean()
+    if cfg.family == "moe":
+        loss = loss + cfg.moe_aux_coef * aux / cfg.n_layers
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+def lm_prefill(params: Params, tokens: jax.Array, cfg, max_len: int, frontend=None):
+    """Full forward that also builds the KV cache.
+
+    Returns (last_logits (B,V), cache) with cache len ``max_len`` >= S.
+    """
+    x = embed_tokens(params, tokens, cfg, frontend)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = shard_act(x, "dp", "sp", None)
+
+    fn = partial(_block_prefill, cfg)
+
+    def step(x, lp):
+        x, (k, v) = fn(shard_params(lp, cfg), x, positions)
+        return x, (k, v)
+
+    if cfg.scan_layers:
+        x, (ks, vs) = jax.lax.scan(step, x, params["layers"])
+    else:
+        ks_l, vs_l = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, (k, v) = step(x, lp)
+            ks_l.append(k)
+            vs_l.append(v)
+        ks, vs = jnp.stack(ks_l), jnp.stack(vs_l)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    last = lm_logits(params, x[:, -1:, :], cfg)[:, 0]
+    cdt = jnp.bfloat16 if cfg.dtype == "bfloat16" else ks.dtype
+    cache = attn.init_cache(cfg, b, max_len, cfg.n_layers, dtype=cdt)
+    cache = {
+        "k": jax.lax.dynamic_update_slice(cache["k"], ks.astype(cdt), (0, 0, 0, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(cache["v"], vs.astype(cdt), (0, 0, 0, 0, 0)),
+    }
+    return last, cache
+
+
+def lm_decode_step(params: Params, cache: dict, tokens: jax.Array, pos: jax.Array, cfg):
+    """One decode step.  tokens (B,) int32, pos (B,) int32 -> (logits (B,V), cache)."""
+    dt = as_dtype(cfg.dtype)
+    x = params["embed"].astype(dt)[tokens]
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model**0.5, dt)
+    x = shard_act(x, "dp", None)
+
+    def step(x, inp):
+        lp, ck, cv = inp
+        x, ck, cv = _block_decode(cfg, shard_params(lp, cfg), x, ck, cv, pos)
+        return x, (ck, cv)
+
+    if cfg.scan_layers:
+        x, (ks, vs) = jax.lax.scan(step, x, (params["layers"], cache["k"], cache["v"]))
+    else:
+        ks_l, vs_l = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, (ck, cv) = step(x, (lp, cache["k"][i], cache["v"][i]))
+            ks_l.append(ck)
+            vs_l.append(cv)
+        ks, vs = jnp.stack(ks_l), jnp.stack(vs_l)
+
+    x = rmsnorm(params["final_norm"], x[:, None, :], cfg.norm_eps)
+    logits = lm_logits(params, x, cfg)[:, 0]
+    return logits, {"k": ks, "v": vs}

@@ -1,0 +1,405 @@
+"""xLSTM LM: mLSTM (matrix-memory, chunkwise-parallel) + sLSTM (scalar-memory,
+sequential) blocks, arranged as scanned macro-blocks of (7 mLSTM + 1 sLSTM).
+
+mLSTM uses the exponentially-gated linear-attention form with running-max
+stabilization, computed chunkwise (the same HBM->VMEM tiling pattern the
+paper's Ch.3 motivates); decode is the exact single-step recurrence.
+Simplification vs. the paper: both block types use a shared gated-FFN
+sub-layer instead of the paper's asymmetric pre/post up-projections.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard_act, shard_params
+
+from .common import (
+    Params,
+    as_dtype,
+    dense_init,
+    embed_init,
+    rmsnorm,
+    rmsnorm_init,
+    softmax_xent,
+    split_keys,
+)
+
+MCLIP = 60.0
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell
+# ---------------------------------------------------------------------------
+def mlstm_init(rng, cfg, dtype=jnp.float32) -> Params:
+    d, h = cfg.d_model, cfg.n_heads
+    k1, k2, k3, k4 = split_keys(rng, 4)
+    return {
+        "norm": rmsnorm_init(d, dtype),
+        "w_qkv": dense_init(k1, (d, 3 * d), dtype=dtype),
+        "w_gates": dense_init(k2, (d, 2 * h), dtype=dtype),
+        "gate_bias": jnp.concatenate([jnp.zeros((h,), dtype), 3.0 * jnp.ones((h,), dtype)]),
+        "ffn_norm": rmsnorm_init(d, dtype),
+        "w_up": dense_init(k3, (d, 4 * d), dtype=dtype),
+        "w_down": dense_init(k4, (2 * d, d), fan_in=2 * d, dtype=dtype),
+    }
+
+
+def _mlstm_qkvif(p, x, cfg):
+    dt = x.dtype
+    b, s, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    qkv = x @ p["w_qkv"].astype(dt)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, s, h, hd) * (hd**-0.5)
+    k = k.reshape(b, s, h, hd)
+    v = v.reshape(b, s, h, hd)
+    gates = (x @ p["w_gates"].astype(dt)).astype(jnp.float32) + p["gate_bias"].astype(
+        jnp.float32
+    )
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)  # (B,S,H)
+    log_f = jax.nn.log_sigmoid(f_raw)
+    return q, k, v, i_raw, log_f
+
+
+def mlstm_chunked(q, k, v, i_raw, log_f, state, chunk: int):
+    """Chunkwise stabilized mLSTM.
+
+    q,k,v (B,S,H,hd); i_raw/log_f (B,S,H); state = (C (B,H,hd,hd), n (B,H,hd),
+    m (B,H)) fp32.  Returns (y (B,S,H,hd), state).
+    """
+    b, s, h, hd = q.shape
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        zf = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(a, zf) for a in (q, k, v))
+        i_raw = jnp.pad(i_raw, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+
+    def chunked(a):  # (B, S', ...) -> (N, B, L, ...)
+        return a.reshape((b, nc, chunk) + a.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc, ic, fc = (chunked(a) for a in (q, k, v, i_raw, log_f))
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))
+
+    def body(carry, inp):
+        C, n, m = carry
+        q_j, k_j, v_j, i_j, f_j = inp
+        q32, k32, v32 = (a.astype(jnp.float32) for a in (q_j, k_j, v_j))
+        F = jnp.cumsum(f_j, axis=1)  # (B,L,H)
+        F_tot = F[:, -1]  # (B,H)
+        b_t = F + m[:, None]  # inter log-scale
+        # intra log weights D_ts = F_t - F_s + i_s
+        D = F[:, :, None, :] - F[:, None, :, :] + i_j[:, None, :, :]  # (B,L,M,H)
+        D = jnp.where(tri[None, :, :, None], D, -jnp.inf)
+        m_intra = D.max(axis=2)  # (B,L,H)
+        m_t = jnp.maximum(b_t, m_intra)
+        m_t = jnp.maximum(m_t, -MCLIP)  # keep denominators sane
+        Dw = jnp.exp(jnp.clip(D - m_t[:, :, None, :], -MCLIP, 0.0))
+        Dw = jnp.where(tri[None, :, :, None], Dw, 0.0)
+        qk = jnp.einsum("blhx,bmhx->blmh", q32, k32)
+        Sw = qk * Dw  # (B,L,M,H)
+        y_intra = jnp.einsum("blmh,bmhx->blhx", Sw, v32)
+        inter_scale = jnp.exp(jnp.clip(b_t - m_t, -MCLIP, 0.0))  # (B,L,H)
+        y_inter = jnp.einsum("blhx,bhxy->blhy", q32, C) * inter_scale[..., None]
+        norm = Sw.sum(axis=2) + jnp.einsum("blhx,bhx->blh", q32, n) * inter_scale
+        denom = jnp.maximum(jnp.abs(norm), jnp.exp(-m_t))
+        y = (y_intra + y_inter) / denom[..., None]
+        # state update
+        s_log = F_tot[:, None, :] - F + i_j  # (B,L,H): decay from s to chunk end
+        m_new = jnp.maximum(F_tot + m, s_log.max(axis=1))
+        m_new = jnp.maximum(m_new, -MCLIP)
+        state_scale = jnp.exp(jnp.clip(F_tot + m - m_new, -MCLIP, 0.0))
+        in_w = jnp.exp(jnp.clip(s_log - m_new[:, None, :], -MCLIP, 0.0))
+        C_new = C * state_scale[:, :, None, None] + jnp.einsum(
+            "blhx,blhy,blh->bhxy", k32, v32, in_w
+        )
+        n_new = n * state_scale[..., None] + jnp.einsum("blhx,blh->bhx", k32, in_w)
+        return (C_new, n_new, m_new), y
+
+    (C, n, m), yc = jax.lax.scan(body, state, (qc, kc, vc, ic, fc))
+    y = yc.swapaxes(0, 1).reshape(b, nc * chunk, h, hd)[:, :s]
+    return y.astype(q.dtype), (C, n, m)
+
+
+def mlstm_step(q, k, v, i_raw, log_f, state):
+    """Exact single-token mLSTM recurrence.  q,k,v (B,H,hd); gates (B,H)."""
+    C, n, m = state
+    q32, k32, v32 = (a.astype(jnp.float32) for a in (q, k, v))
+    m_new = jnp.maximum(log_f + m, i_raw)
+    m_new = jnp.maximum(m_new, -MCLIP)
+    f_w = jnp.exp(jnp.clip(log_f + m - m_new, -MCLIP, 0.0))
+    i_w = jnp.exp(jnp.clip(i_raw - m_new, -MCLIP, 0.0))
+    C = C * f_w[..., None, None] + i_w[..., None, None] * jnp.einsum(
+        "bhx,bhy->bhxy", k32, v32
+    )
+    n = n * f_w[..., None] + i_w[..., None] * k32
+    y = jnp.einsum("bhx,bhxy->bhy", q32, C)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhx,bhx->bh", q32, n)), jnp.exp(-m_new))
+    y = y / denom[..., None]
+    return y.astype(q.dtype), (C, n, m_new)
+
+
+def _ffn(p, x, cfg):
+    dt = x.dtype
+    up = x @ p["w_up"].astype(dt)
+    g, u = jnp.split(up, 2, axis=-1)
+    return (jax.nn.silu(g) * u) @ p["w_down"].astype(dt)
+
+
+def mlstm_block(p: Params, x: jax.Array, cfg, state=None, return_state: bool = False):
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, d // cfg.n_heads
+    if state is None:
+        state = (
+            jnp.zeros((b, h, hd, hd), jnp.float32),
+            jnp.zeros((b, h, hd), jnp.float32),
+            jnp.zeros((b, h), jnp.float32),
+        )
+    xin = rmsnorm(p["norm"], x, cfg.norm_eps)
+    q, k, v, i_raw, log_f = _mlstm_qkvif(p, xin, cfg)
+    y, state = mlstm_chunked(q, k, v, i_raw, log_f, state, cfg.ssm_chunk)
+    x = x + y.reshape(b, s, d)
+    x = x + _ffn(p, rmsnorm(p["ffn_norm"], x, cfg.norm_eps), cfg)
+    x = shard_act(x, "dp", None, None)
+    if return_state:
+        return x, state
+    return x
+
+
+def mlstm_block_decode(p: Params, x: jax.Array, cfg, state):
+    """x (B,d)."""
+    b, d = x.shape
+    h, hd = cfg.n_heads, d // cfg.n_heads
+    xin = rmsnorm(p["norm"], x[:, None], cfg.norm_eps)
+    q, k, v, i_raw, log_f = _mlstm_qkvif(p, xin, cfg)
+    y, state = mlstm_step(q[:, 0], k[:, 0], v[:, 0], i_raw[:, 0], log_f[:, 0], state)
+    x = x + y.reshape(b, d)
+    x = x + _ffn(p, rmsnorm(p["ffn_norm"], x[:, None], cfg.norm_eps), cfg)[:, 0]
+    return x, state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM cell (sequential scan; few layers)
+# ---------------------------------------------------------------------------
+def slstm_init(rng, cfg, dtype=jnp.float32) -> Params:
+    d, h = cfg.d_model, cfg.n_heads
+    hd = d // h
+    k1, k2, k3, k4 = split_keys(rng, 4)
+    return {
+        "norm": rmsnorm_init(d, dtype),
+        "w_x": dense_init(k1, (d, 4 * d), dtype=dtype),
+        "bias": jnp.concatenate(
+            [jnp.zeros((2 * d,), dtype), 3.0 * jnp.ones((d,), dtype), jnp.zeros((d,), dtype)]
+        ),
+        "r": 0.1 * jax.random.normal(k2, (4, h, hd, hd), dtype),
+        "ffn_norm": rmsnorm_init(d, dtype),
+        "w_up": dense_init(k3, (d, 4 * d), dtype=dtype),
+        "w_down": dense_init(k4, (2 * d, d), fan_in=2 * d, dtype=dtype),
+    }
+
+
+def _slstm_scan(p, xg, cfg, state):
+    """xg: (B,S,4d) precomputed input projections (+bias).  Sequential scan."""
+    b, s, _ = xg.shape
+    d = cfg.d_model
+    h, hd = cfg.n_heads, d // cfg.n_heads
+    r = p["r"].astype(jnp.float32)
+
+    def step(carry, x_t):
+        c, n, m, hprev = carry  # (B,H,hd) x3, m (B,H,hd)... m per unit
+        rec = jnp.einsum("bhx,ghxy->gbhy", hprev, r)  # (4,B,H,hd)
+        zt, it, ft, ot = (
+            x_t.reshape(b, 4, h, hd).swapaxes(0, 1).astype(jnp.float32) + rec
+        )
+        z = jnp.tanh(zt)
+        o = jax.nn.sigmoid(ot)
+        log_f = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(log_f + m, it)
+        m_new = jnp.maximum(m_new, -MCLIP)
+        f_w = jnp.exp(jnp.clip(log_f + m - m_new, -MCLIP, 0.0))
+        i_w = jnp.exp(jnp.clip(it - m_new, -MCLIP, 0.0))
+        c = f_w * c + i_w * z
+        n = f_w * n + i_w
+        h_new = o * c / jnp.maximum(n, 1.0)
+        return (c, n, m_new, h_new), h_new
+
+    (c, n, m, hlast), ys = jax.lax.scan(step, state, xg.swapaxes(0, 1))
+    return ys.swapaxes(0, 1).reshape(b, s, d), (c, n, m, hlast)
+
+
+def slstm_zero_state(cfg, batch):
+    h, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    z = jnp.zeros((batch, h, hd), jnp.float32)
+    return (z, z, z, z)
+
+
+def slstm_block(p: Params, x: jax.Array, cfg, state=None, return_state: bool = False):
+    b, s, d = x.shape
+    if state is None:
+        state = slstm_zero_state(cfg, b)
+    xin = rmsnorm(p["norm"], x, cfg.norm_eps)
+    xg = xin @ p["w_x"].astype(x.dtype) + p["bias"].astype(x.dtype)
+    y, state = _slstm_scan(p, xg, cfg, state)
+    x = x + y.astype(x.dtype)
+    x = x + _ffn(p, rmsnorm(p["ffn_norm"], x, cfg.norm_eps), cfg)
+    x = shard_act(x, "dp", None, None)
+    if return_state:
+        return x, state
+    return x
+
+
+def slstm_block_decode(p: Params, x: jax.Array, cfg, state):
+    b, d = x.shape
+    xin = rmsnorm(p["norm"], x[:, None], cfg.norm_eps)
+    xg = xin @ p["w_x"].astype(x.dtype) + p["bias"].astype(x.dtype)
+    y, state = _slstm_scan(p, xg, cfg, state)
+    x = x + y[:, 0].astype(x.dtype)
+    x = x + _ffn(p, rmsnorm(p["ffn_norm"], x[:, None], cfg.norm_eps), cfg)[:, 0]
+    return x, state
+
+
+# ---------------------------------------------------------------------------
+# full LM
+# ---------------------------------------------------------------------------
+def _n_macros(cfg):
+    per = cfg.xlstm_mlstm_per_macro + cfg.xlstm_slstm_per_macro
+    assert cfg.n_layers % per == 0, "n_layers must divide into macro blocks"
+    return cfg.n_layers // per
+
+
+def xlstm_init(rng, cfg) -> Params:
+    dtype = as_dtype(cfg.param_dtype)
+    nm = _n_macros(cfg)
+    ke, km, kh = split_keys(rng, 3)
+
+    def macro_init(k):
+        k1, k2 = split_keys(k, 2)
+        mkeys = jnp.stack(split_keys(k1, cfg.xlstm_mlstm_per_macro))
+        return {
+            "mlstm": jax.vmap(lambda kk: mlstm_init(kk, cfg, dtype))(mkeys),
+            "slstm": slstm_init(k2, cfg, dtype),
+        }
+
+    mkeys = jnp.stack(split_keys(km, nm))
+    return {
+        "embed": embed_init(ke, (cfg.padded_vocab, cfg.d_model), dtype),
+        "macros": jax.vmap(macro_init)(mkeys),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+        "lm_head": embed_init(kh, (cfg.d_model, cfg.padded_vocab), dtype),
+    }
+
+
+def xlstm_forward(params: Params, tokens: jax.Array, cfg):
+    dt = as_dtype(cfg.dtype)
+    x = params["embed"].astype(dt)[tokens]
+    x = shard_act(x, "dp", None, None)
+
+    mblock = partial(mlstm_block, cfg=cfg)
+    sblock = partial(slstm_block, cfg=cfg)
+    if cfg.remat:
+        mblock = jax.checkpoint(mblock)
+        sblock = jax.checkpoint(sblock)
+
+    def macro_step(x, mp):
+        mp = shard_params(mp, cfg)
+
+        def layer(x, lp):
+            return mblock(lp, x), None
+
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(layer, x, mp["mlstm"])
+        else:
+            for i in range(cfg.xlstm_mlstm_per_macro):
+                x, _ = layer(x, jax.tree.map(lambda a: a[i], mp["mlstm"]))
+        x = sblock(mp["slstm"], x)
+        return x, None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(macro_step, x, params["macros"])
+    else:
+        for i in range(_n_macros(cfg)):
+            x, _ = macro_step(x, jax.tree.map(lambda a: a[i], params["macros"]))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(dt))
+    return shard_act(logits, "dp", None, "tp")
+
+
+def xlstm_loss(params: Params, batch: dict, cfg) -> jax.Array:
+    logits = xlstm_forward(params, batch["tokens"], cfg)
+    return softmax_xent(logits, batch["targets"]).mean()
+
+
+# --- serving -----------------------------------------------------------------
+def xlstm_cache_specs(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    nm = _n_macros(cfg)
+    h, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    nmm = cfg.xlstm_mlstm_per_macro
+    f32 = jnp.float32
+    return {
+        "mC": jax.ShapeDtypeStruct((nm, nmm, batch, h, hd, hd), f32),
+        "mn": jax.ShapeDtypeStruct((nm, nmm, batch, h, hd), f32),
+        "mm": jax.ShapeDtypeStruct((nm, nmm, batch, h), f32),
+        "sc": jax.ShapeDtypeStruct((nm, batch, h, hd), f32),
+        "sn": jax.ShapeDtypeStruct((nm, batch, h, hd), f32),
+        "sm": jax.ShapeDtypeStruct((nm, batch, h, hd), f32),
+        "sh": jax.ShapeDtypeStruct((nm, batch, h, hd), f32),
+    }
+
+
+def xlstm_init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda sd: jnp.zeros(sd.shape, sd.dtype), xlstm_cache_specs(cfg, batch, max_len)
+    )
+
+
+def xlstm_decode_step(params: Params, cache: dict, tokens: jax.Array, pos: jax.Array, cfg):
+    dt = as_dtype(cfg.dtype)
+    x = params["embed"].astype(dt)[tokens]
+
+    def macro_step(x, inp):
+        mp, mC, mn, mm, sc, sn, sm, sh = inp
+
+        def layer(carry, lin):
+            x = carry
+            lp, C, n, m = lin
+            x, (C, n, m) = mlstm_block_decode(lp, x, cfg, (C, n, m))
+            return x, (C, n, m)
+
+        if cfg.scan_layers:
+            x, (mC, mn, mm) = jax.lax.scan(layer, x, (mp["mlstm"], mC, mn, mm))
+        else:
+            acc = []
+            for i in range(cfg.xlstm_mlstm_per_macro):
+                x, st = layer(x, jax.tree.map(lambda a: a[i], (mp["mlstm"], mC, mn, mm)))
+                acc.append(st)
+            mC, mn, mm = (jnp.stack([a[j] for a in acc]) for j in range(3))
+        x, (sc, sn, sm, sh) = slstm_block_decode(mp["slstm"], x, cfg, (sc, sn, sm, sh))
+        return x, (mC, mn, mm, sc, sn, sm, sh)
+
+    scan_in = (
+        params["macros"],
+        cache["mC"],
+        cache["mn"],
+        cache["mm"],
+        cache["sc"],
+        cache["sn"],
+        cache["sm"],
+        cache["sh"],
+    )
+    if cfg.scan_layers:
+        x, (mC, mn, mm, sc, sn, sm, sh) = jax.lax.scan(macro_step, x, scan_in)
+    else:
+        outs = []
+        for i in range(_n_macros(cfg)):
+            x, o = macro_step(x, jax.tree.map(lambda a: a[i], scan_in))
+            outs.append(o)
+        mC, mn, mm, sc, sn, sm, sh = (jnp.stack([o[j] for o in outs]) for j in range(7))
+    x = rmsnorm(params["final_norm"], x[:, None], cfg.norm_eps)[:, 0]
+    logits = x @ params["lm_head"].astype(dt)
+    cache = {"mC": mC, "mn": mn, "mm": mm, "sc": sc, "sn": sn, "sm": sm, "sh": sh}
+    return logits, cache

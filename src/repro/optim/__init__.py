@@ -1,0 +1,6 @@
+"""Optimizer substrate: AdamW (ZeRO-shardable), schedules, clipping."""
+from .adamw import AdamW, AdamWState
+from .schedule import cosine_with_warmup
+from .clip import clip_by_global_norm
+
+__all__ = ["AdamW", "AdamWState", "cosine_with_warmup", "clip_by_global_norm"]

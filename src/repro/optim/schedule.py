@@ -1,0 +1,22 @@
+"""LR schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(base_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def constant(base_lr: float):
+    def lr(step):
+        return jnp.asarray(base_lr, jnp.float32)
+
+    return lr

@@ -1,0 +1,5 @@
+"""Performance model: HLO cost extraction + collective parsing + roofline."""
+from .roofline import RooflineTerms, roofline
+from .hlo import collective_bytes
+
+__all__ = ["RooflineTerms", "roofline", "collective_bytes"]

@@ -1,0 +1,88 @@
+"""Three-term roofline from dry-run artifacts (per assignment §Roofline).
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s_per_chip
+    memory term     = HLO_bytes_per_device / HBM_bw_per_chip
+    collective term = collective_bytes_per_device / link_bw
+
+(cost_analysis() reports per-device figures for SPMD modules — verified
+empirically — so the assignment's "global / chips" division is already done.)
+The dominant term is the bottleneck; the roofline fraction reported in §Perf
+is MODEL_FLOPS_time / max(term) — how close useful model math runs to the
+hardware bound.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.hwmodel import TPU_V5E, HardwareModel
+
+from .costs import CompiledCosts
+from .hlo import CollectiveStats
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float  # useful math (6ND / 2ND), global
+    hlo_flops_global: float
+    useful_ratio: float  # model_flops / hlo_flops_global
+    roofline_fraction: float  # model compute time / dominant bound
+    chips: int
+
+    def summary(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "hlo_flops_global": self.hlo_flops_global,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "chips": self.chips,
+        }
+
+
+def model_flops(kind: str, n_params_active: float, tokens: float) -> float:
+    """6ND for training (fwd+bwd), 2ND for inference-only passes."""
+    if kind == "train":
+        return 6.0 * n_params_active * tokens
+    return 2.0 * n_params_active * tokens
+
+
+def roofline(
+    costs: CompiledCosts,
+    coll: CollectiveStats,
+    chips: int,
+    kind: str,
+    n_params_active: float,
+    tokens: float,
+    hw: HardwareModel = TPU_V5E,
+    dtype: str = "bfloat16",
+) -> RooflineTerms:
+    peak = hw.peak(dtype)
+    t_c = costs.flops_per_device / peak
+    t_m = costs.bytes_per_device / hw.main_memory_Bps
+    t_x = coll.per_device_bytes / hw.ici_Bps_per_link
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(kind, n_params_active, tokens)
+    hlo_global = costs.flops_per_device * chips
+    useful = mf / hlo_global if hlo_global else 0.0
+    t_model = mf / (chips * peak)
+    bound = max(terms.values())
+    frac = t_model / bound if bound > 0 else 0.0
+    return RooflineTerms(
+        compute_s=t_c,
+        memory_s=t_m,
+        collective_s=t_x,
+        dominant=dominant,
+        model_flops=mf,
+        hlo_flops_global=hlo_global,
+        useful_ratio=useful,
+        roofline_fraction=frac,
+        chips=chips,
+    )

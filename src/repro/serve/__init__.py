@@ -1,0 +1,6 @@
+"""Serving substrate: batched prefill/decode engine, sampler, batcher."""
+from .engine import ServeEngine
+from .sampler import greedy, temperature_sample
+from .batcher import Batcher, Request
+
+__all__ = ["ServeEngine", "greedy", "temperature_sample", "Batcher", "Request"]

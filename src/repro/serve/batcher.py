@@ -1,0 +1,72 @@
+"""Static-slot continuous batcher.
+
+The engine runs a fixed-batch decode step (TPU-friendly: one compiled
+shape); the batcher multiplexes a request queue onto those slots —
+admitting a new request into a slot the moment its occupant finishes
+(continuous batching at step granularity).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list  # token ids
+    max_new_tokens: int
+    out: list = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class Slot:
+    request: Optional[Request] = None
+    pos: int = 0  # next cache position
+
+
+class Batcher:
+    def __init__(self, n_slots: int, max_len: int):
+        self.slots = [Slot() for _ in range(n_slots)]
+        self.max_len = max_len
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def admit(self) -> list[tuple[int, Request]]:
+        """Fill free slots from the queue; returns [(slot_idx, request)] that
+        need prefill."""
+        admitted = []
+        for i, slot in enumerate(self.slots):
+            if slot.request is None and self.queue:
+                req = self.queue.pop(0)
+                slot.request = req
+                slot.pos = len(req.prompt)
+                admitted.append((i, req))
+        return admitted
+
+    def active(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s.request is not None]
+
+    def record_token(self, slot_idx: int, token: int, eos_id: Optional[int] = None):
+        slot = self.slots[slot_idx]
+        req = slot.request
+        if req is None:
+            return
+        req.out.append(int(token))
+        slot.pos += 1
+        if (
+            len(req.out) >= req.max_new_tokens
+            or slot.pos >= self.max_len
+            or (eos_id is not None and token == eos_id)
+        ):
+            req.done = True
+            self.finished.append(req)
+            slot.request = None
+            slot.pos = 0
+
+    def idle(self) -> bool:
+        return not self.queue and not self.active()

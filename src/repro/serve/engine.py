@@ -1,0 +1,90 @@
+"""Batched serving engine: per-slot prefill + fused fixed-shape decode step.
+
+One compiled decode step serves all slots every tick; slot admission happens
+between ticks (continuous batching).  Per-slot prefill writes the new
+request's KV into the shared cache via the model's prefill path at the
+slot's batch index.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import ModelApi
+
+from .batcher import Batcher, Request
+from .sampler import greedy
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        model: ModelApi,
+        params,
+        n_slots: int,
+        max_len: int,
+        sampler=greedy,
+        eos_id: Optional[int] = None,
+    ):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.sampler = sampler
+        self.eos_id = eos_id
+        self.batcher = Batcher(n_slots, max_len)
+        self.cache = model.init_cache(n_slots, max_len)
+        self.last_token = jnp.zeros((n_slots,), jnp.int32)
+        self.pos = jnp.zeros((n_slots,), jnp.int32)
+        self._decode = jax.jit(model.decode_step)
+        self._rid = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: list[int], max_new_tokens: int) -> Request:
+        req = Request(self._rid, prompt, max_new_tokens)
+        self._rid += 1
+        self.batcher.submit(req)
+        return req
+
+    # ------------------------------------------------------------------
+    def _prefill_slot(self, slot: int, req: Request):
+        """Run the prompt through the model one token at a time into this
+        slot's cache lane (simple + exact; a production engine would batch
+        prefill separately)."""
+        toks = jnp.asarray(req.prompt, jnp.int32)
+        for t in range(len(req.prompt)):
+            tok = self.last_token.at[slot].set(toks[t])
+            pos = self.pos.at[slot].set(t)
+            logits, self.cache = self._decode(self.params, self.cache, tok, pos)
+        self.last_token = self.last_token.at[slot].set(
+            self.sampler(logits[slot])
+            if logits.ndim == 1
+            else self.sampler(logits)[slot]
+        )
+        self.pos = self.pos.at[slot].set(len(req.prompt))
+        req.out.append(int(self.last_token[slot]))
+
+    # ------------------------------------------------------------------
+    def step(self):
+        """One engine tick: admit, decode, record."""
+        for slot, req in self.batcher.admit():
+            self._prefill_slot(slot, req)
+        active = self.batcher.active()
+        if not active:
+            return
+        logits, self.cache = self._decode(
+            self.params, self.cache, self.last_token, self.pos
+        )
+        next_tok = self.sampler(logits)
+        self.last_token = next_tok
+        self.pos = self.pos + 1
+        for slot in active:
+            self.batcher.record_token(slot, int(next_tok[slot]), self.eos_id)
+
+    def run(self, max_ticks: int = 10_000) -> list[Request]:
+        ticks = 0
+        while not self.batcher.idle() and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.batcher.finished

@@ -1,0 +1,19 @@
+"""Token samplers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jax.Array, rng=None) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature_sample(logits: jax.Array, rng, temperature: float = 1.0) -> jax.Array:
+    return jax.random.categorical(rng, logits / max(temperature, 1e-4)).astype(jnp.int32)
+
+
+def top_k_sample(logits: jax.Array, rng, k: int = 40, temperature: float = 1.0) -> jax.Array:
+    vals, idx = jax.lax.top_k(logits, k)
+    choice = jax.random.categorical(rng, vals / max(temperature, 1e-4))
+    return jnp.take_along_axis(idx, choice[..., None], axis=-1)[..., 0].astype(jnp.int32)

@@ -1,0 +1,4 @@
+"""Training substrate: step functions, microbatching, loop, fault tolerance."""
+from .step import make_train_step, TrainState
+
+__all__ = ["make_train_step", "TrainState"]

@@ -1,0 +1,88 @@
+"""Train step: loss -> grads (optionally microbatched) -> clip -> AdamW.
+
+Microbatching (gradient accumulation via lax.scan) bounds live activation
+memory; remat inside the model bounds per-layer memory; ZeRO-1 shardings on
+the optimizer state bound state memory.  Together these set the per-device
+HBM footprint the dry-run's memory_analysis() verifies.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import AdamW, AdamWState, clip_by_global_norm
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def make_train_step(
+    loss_fn: Callable,  # (params, batch) -> scalar
+    optimizer: AdamW,
+    lr_fn: Callable,  # step -> lr
+    microbatches: int = 1,
+    clip_norm: float = 1.0,
+    grad_shardings=None,  # ZeRO-2: store (accumulated) grads data-sharded
+):
+    """Returns step(state, batch) -> (state, metrics)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def _constrain(g):
+        if grad_shardings is None:
+            return g
+        return jax.tree.map(jax.lax.with_sharding_constraint, g, grad_shardings)
+
+    def step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        params, opt_state = state
+        if microbatches == 1:
+            loss, grads = grads_of(params, batch)
+            grads = _constrain(grads)
+        else:
+
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return x.reshape((microbatches, b // microbatches) + x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+            zeros = _constrain(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            )
+
+            def acc(carry, mb):
+                loss_sum, gacc = carry
+                l, g = grads_of(params, mb)
+                # reduce-scatter each microbatch grad into the ZeRO layout
+                gacc = _constrain(
+                    jax.tree.map(lambda a, b: a + b.astype(jnp.float32), gacc, g)
+                )
+                return (loss_sum + l, gacc), None
+
+            (loss_sum, gsum), _ = jax.lax.scan(acc, (jnp.zeros((), jnp.float32), zeros), mbs)
+            loss = loss_sum / microbatches
+            grads = jax.tree.map(lambda g: (g / microbatches), gsum)
+
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr = lr_fn(opt_state.step)
+        updates, opt_state = optimizer.update(grads, opt_state, params, lr)
+        params = optimizer.apply(params, updates)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return TrainState(params, opt_state), metrics
+
+    return step
+
+
+def init_state(model_init: Callable, optimizer: AdamW, rng) -> TrainState:
+    params = model_init(rng)
+    return TrainState(params=params, opt=optimizer.init(params))
+
+
+def state_shapes(model_init: Callable, optimizer: AdamW) -> TrainState:
+    """Abstract TrainState (ShapeDtypeStructs) — dry-run: no allocation."""
+    return jax.eval_shape(lambda: init_state(model_init, optimizer, jax.random.key(0)))

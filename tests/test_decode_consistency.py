@@ -1,0 +1,124 @@
+"""Decode-path correctness: prefill + decode_step must continue the full
+forward pass exactly (the KV-cache/recurrent-state bookkeeping oracle)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.models import transformer as tr
+from repro.models import xlstm as xl
+from repro.models import mamba as mb
+
+B, S = 2, 32
+
+
+def _logits_at_last(cfg, model, params, toks):
+    """Reference: full forward logits at every position."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        logits, _ = tr.lm_forward(params, toks, cfg)
+        return logits
+    if cfg.family == "ssm":
+        return xl.xlstm_forward(params, toks, cfg)
+    if cfg.family == "hybrid":
+        return mb.zamba_forward(params, toks, cfg)
+    raise ValueError(cfg.family)
+
+
+@pytest.mark.parametrize(
+    "name", ["qwen2.5-14b", "gemma-2b", "olmoe-1b-7b", "xlstm-1.3b", "zamba2-7b"]
+)
+def test_prefill_then_decode_matches_forward(name):
+    cfg = get_config(name).reduced()
+    if cfg.family == "moe":
+        cfg = cfg.replace(capacity_factor=8.0)  # no token drops -> exactness
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(7), (B, S), 0, cfg.vocab_size)
+
+    full = _logits_at_last(cfg, model, params, toks)
+    last, cache = model.prefill(params, {"tokens": toks[:, :-1]}, S + 8)
+    np.testing.assert_allclose(
+        np.asarray(last), np.asarray(full[:, -2]), rtol=5e-3, atol=5e-3
+    )
+    lg, _ = model.decode_step(params, cache, toks[:, -1], jnp.full((B,), S - 1, jnp.int32))
+    np.testing.assert_allclose(
+        np.asarray(lg), np.asarray(full[:, -1]), rtol=5e-3, atol=5e-3
+    )
+
+
+def test_whisper_prefill_decode_consistency():
+    cfg = get_config("whisper-base").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    frames = 0.1 * jnp.ones((B, cfg.frontend_len, cfg.d_model), jnp.float32)
+    toks = jax.random.randint(jax.random.key(3), (B, S), 0, cfg.vocab_size)
+
+    from repro.models import encdec
+
+    enc_out = encdec.encode(params, frames, cfg)
+    full = encdec.decode_train(params, toks, enc_out, cfg)
+    last, cache = model.prefill(params, {"frontend": frames, "tokens": toks[:, :-1]}, S + 8)
+    np.testing.assert_allclose(
+        np.asarray(last), np.asarray(full[:, -2]), rtol=5e-3, atol=5e-3
+    )
+    lg, _ = model.decode_step(params, cache, toks[:, -1], jnp.full((B,), S - 1, jnp.int32))
+    np.testing.assert_allclose(
+        np.asarray(lg), np.asarray(full[:, -1]), rtol=5e-3, atol=5e-3
+    )
+
+
+def test_mlstm_chunked_equals_stepwise():
+    """Chunked-parallel mLSTM == exact sequential recurrence."""
+    cfg = get_config("xlstm-1.3b").reduced()
+    h, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    rng = np.random.default_rng(0)
+    s = 24
+    q = jnp.asarray(rng.normal(size=(B, s, h, hd)).astype(np.float32)) * hd**-0.5
+    k = jnp.asarray(rng.normal(size=(B, s, h, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, s, h, hd)).astype(np.float32))
+    i_raw = jnp.asarray(rng.normal(size=(B, s, h)).astype(np.float32))
+    log_f = jax.nn.log_sigmoid(jnp.asarray(rng.normal(size=(B, s, h)).astype(np.float32)) + 2.0)
+
+    state = (
+        jnp.zeros((B, h, hd, hd), jnp.float32),
+        jnp.zeros((B, h, hd), jnp.float32),
+        jnp.zeros((B, h), jnp.float32),
+    )
+    y_chunk, st_chunk = xl.mlstm_chunked(q, k, v, i_raw, log_f, state, chunk=8)
+
+    st = state
+    ys = []
+    for t in range(s):
+        y_t, st = xl.mlstm_step(q[:, t], k[:, t], v[:, t], i_raw[:, t], log_f[:, t], st)
+        ys.append(y_t)
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_seq), rtol=2e-4, atol=2e-4)
+    for a, b2 in zip(st_chunk[:2], st[:2]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b2), rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_chunked_equals_stepwise():
+    """Chunked SSD == sequential recurrence (model-level path)."""
+    rng = np.random.default_rng(1)
+    bsz, s, h, p, n = 2, 32, 3, 8, 4
+    u = jnp.asarray(rng.normal(size=(bsz, s, h, p)).astype(np.float32))
+    a_log = -jnp.abs(jnp.asarray(rng.normal(size=(bsz, s, h)).astype(np.float32))) * 0.2
+    B_ = jnp.asarray(rng.normal(size=(bsz, s, n)).astype(np.float32))
+    C_ = jnp.asarray(rng.normal(size=(bsz, s, n)).astype(np.float32))
+    h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    y_chunk, hf = mb.ssd_chunked(u, a_log, B_, C_, h0, chunk=8)
+
+    # sequential reference
+    hs = np.zeros((bsz, h, p, n), np.float32)
+    ys = np.zeros((bsz, s, h, p), np.float32)
+    for t in range(s):
+        decay = np.exp(np.asarray(a_log[:, t]))  # (B,H)
+        hs = hs * decay[..., None, None] + np.einsum(
+            "bhp,bn->bhpn", np.asarray(u[:, t]), np.asarray(B_[:, t])
+        )
+        ys[:, t] = np.einsum("bhpn,bn->bhp", hs, np.asarray(C_[:, t]))
+    np.testing.assert_allclose(np.asarray(y_chunk), ys, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(hf), hs, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,206 @@
+"""Distribution layer tests (multi fake devices via subprocess — conftest
+deliberately leaves the main pytest process at 1 device)."""
+import numpy as np
+import pytest
+
+from utils import run_with_devices
+
+
+def test_sharding_rules_resolve():
+    out = run_with_devices(
+        """
+        import jax
+        from repro.configs import get_config
+        from repro.launch.mesh import make_test_mesh
+        from repro.dist.sharding import param_specs
+        from repro.models import build_model
+
+        cfg = get_config("qwen2.5-14b")
+        mesh = make_test_mesh()  # (data=2, model=4)
+        model = build_model(cfg)
+        shapes = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+        specs = param_specs(shapes, cfg, mesh)
+        import jax.tree_util as jtu
+        flat = jtu.tree_flatten_with_path(specs)[0]
+        shard_count = 0
+        for path, s in flat:
+            p = "/".join(str(getattr(q, "key", q)) for q in path)
+            if "wq" in p or "wi_gate" in p or "embed" in p:
+                assert "model" in str(s.spec), (p, s.spec)
+            if "model" in str(s.spec):
+                shard_count += 1
+        assert shard_count >= 6, shard_count
+        print("OK", shard_count)
+        """
+    )
+    assert "OK" in out
+
+
+def test_zero1_adds_data_axis():
+    out = run_with_devices(
+        """
+        import jax
+        from repro.configs import get_config
+        from repro.launch.mesh import make_test_mesh
+        from repro.dist.sharding import param_specs
+        from repro.dist.zero import zero1_state_specs
+        from repro.models import build_model
+
+        cfg = get_config("qwen2.5-14b")
+        mesh = make_test_mesh()
+        model = build_model(cfg)
+        shapes = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+        pspecs = param_specs(shapes, cfg, mesh)
+        zspecs = zero1_state_specs(shapes, pspecs, mesh)
+        import jax.tree_util as jtu
+        n_data = sum(1 for s in jtu.tree_leaves(zspecs) if "data" in str(s.spec))
+        assert n_data > 0, "ZeRO-1 added no data-axis shards"
+        print("OK", n_data)
+        """
+    )
+    assert "OK" in out
+
+
+def test_compressed_psum_close_to_exact():
+    out = run_with_devices(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.launch.mesh import make_test_mesh
+        from repro.dist.compress import psum_compressed, quantize_int8, dequantize_int8
+
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(64,)).astype(np.float32))
+        q, s = quantize_int8(x)
+        rt = dequantize_int8(q, s)
+        assert float(jnp.abs(rt - x).max()) <= float(s) * 0.51 + 1e-6
+
+        mesh = make_test_mesh(multi_pod=True)  # (pod=2, data=2, model=2)
+        def body(v):
+            return psum_compressed(v, "pod", mode="int8")
+        f = jax.shard_map(body, mesh=mesh, in_specs=P("pod"), out_specs=P("pod"))
+        v = jnp.stack([x, 2 * x])  # pod-sharded rows
+        out = f(v)
+        expect = 3 * x  # sum across pods
+        err = float(jnp.abs(out[0] - expect).max()) / float(jnp.abs(expect).max())
+        assert err < 0.02, err
+        print("OK", err)
+        """
+    )
+    assert "OK" in out
+
+
+def test_error_feedback_reduces_bias():
+    out = run_with_devices(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.dist.compress import quantize_int8, dequantize_int8
+
+        rng = np.random.default_rng(1)
+        g = jnp.asarray(rng.normal(size=(256,)).astype(np.float32)) * 1e-3
+        # repeated compression WITHOUT EF accumulates bias; WITH EF it corrects
+        err = jnp.zeros_like(g)
+        acc_ef, acc_raw = jnp.zeros_like(g), jnp.zeros_like(g)
+        for _ in range(50):
+            q, s = quantize_int8(g + err)
+            rt = dequantize_int8(q, s)
+            err = (g + err) - rt
+            acc_ef = acc_ef + rt
+            q2, s2 = quantize_int8(g)
+            acc_raw = acc_raw + dequantize_int8(q2, s2)
+        truth = 50 * g
+        e_ef = float(jnp.abs(acc_ef - truth).mean())
+        e_raw = float(jnp.abs(acc_raw - truth).mean())
+        assert e_ef <= e_raw + 1e-9, (e_ef, e_raw)
+        print("OK", e_ef, e_raw)
+        """
+    )
+    assert "OK" in out
+
+
+def test_gpipe_matches_sequential():
+    out = run_with_devices(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.mesh import make_test_mesh
+        from repro.dist.pipeline import gpipe_apply
+
+        mesh = make_test_mesh(multi_pod=True)  # pod axis = 2 stages
+        n_stages, n_micro, mb, d = 2, 4, 3, 8
+        rng = np.random.default_rng(0)
+        w = jnp.asarray(rng.normal(size=(n_stages, d, d)).astype(np.float32)) * 0.3
+        x = jnp.asarray(rng.normal(size=(n_micro, mb, d)).astype(np.float32))
+
+        def stage(params, h):
+            return jnp.tanh(h @ params)
+
+        got = gpipe_apply(lambda p, h: stage(p["w"], h), {"w": w}, x, mesh, axis="pod")
+        # sequential reference
+        want = x
+        for s in range(n_stages):
+            want = jnp.tanh(want @ w[s])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+        # differentiability (GPipe training)
+        def loss(w_):
+            y = gpipe_apply(lambda p, h: stage(p["w"], h), {"w": w_}, x, mesh, axis="pod")
+            return jnp.sum(y ** 2)
+        g = jax.grad(loss)(w)
+        assert bool(jnp.isfinite(g).all()) and float(jnp.abs(g).max()) > 0
+        print("OK")
+        """
+    )
+    assert "OK" in out
+
+
+def test_small_mesh_dryrun_cell_compiles():
+    """Integration: a reduced train cell lowers + compiles on a (2,4) mesh
+    with memory/cost/collective extraction — the dry-run path end-to-end."""
+    out = run_with_devices(
+        """
+        import dataclasses, jax
+        from repro.configs import get_config, get_shape
+        from repro.launch.cell import build_cell, cost_reference
+        from repro.launch.mesh import make_test_mesh
+        from repro.perfmodel.costs import extract_costs
+        from repro.perfmodel.hlo import collective_bytes
+
+        cfg = get_config("olmoe-1b-7b").reduced().replace(vocab_size=512)
+        shape = dataclasses.replace(get_shape("train_4k"), seq_len=128, global_batch=8)
+        mesh = make_test_mesh()
+        cell = build_cell(cfg, shape, mesh)
+        compiled = cell.lower().compile()
+        costs = extract_costs(compiled)
+        coll = collective_bytes(compiled.as_text())
+        ref = cost_reference(cfg, shape)
+        assert costs.peak_hbm_bytes > 0
+        assert coll.per_device_bytes > 0
+        assert ref["global_flops"] > costs.flops_per_device  # loop undercount is real
+        print("OK", int(coll.per_device_bytes))
+        """
+    )
+    assert "OK" in out
+
+
+def test_elastic_reshard_across_meshes():
+    out = run_with_devices(
+        """
+        import jax, jax.numpy as jnp, numpy as np, tempfile
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.ckpt import CheckpointManager, load_resharded
+        from repro.launch.mesh import make_mesh_for
+
+        tree = {"w": jnp.arange(64.0).reshape(8, 8)}
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d)
+            mgr.save(3, tree)
+            # resume on a DIFFERENT mesh factorization (elastic shrink 8 -> 4)
+            mesh_b = make_mesh_for(4, model_parallel=2)
+            sh = {"w": NamedSharding(mesh_b, P("data", "model"))}
+            step, restored = load_resharded(mgr, jax.eval_shape(lambda: tree), sh)
+            assert step == 3
+            np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+            assert restored["w"].sharding.mesh.shape["model"] == 2
+        print("OK")
+        """
+    )
+    assert "OK" in out

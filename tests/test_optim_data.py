@@ -1,0 +1,79 @@
+"""Optimizer, schedule, clipping, data pipeline unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import DataPipeline, SyntheticLM
+from repro.optim import AdamW, clip_by_global_norm, cosine_with_warmup
+
+
+def test_adamw_matches_reference_step():
+    opt = AdamW(b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0)
+    params = {"w": jnp.array([1.0, -2.0, 3.0])}
+    grads = {"w": jnp.array([0.1, -0.2, 0.3])}
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, lr=0.01)
+    # step 1: mhat = g, vhat = g^2 -> update = -lr * g/(|g|+eps) = -lr*sign(g)
+    np.testing.assert_allclose(
+        np.asarray(updates["w"]), -0.01 * np.sign([0.1, -0.2, 0.3]), rtol=1e-4
+    )
+    new = opt.apply(params, updates)
+    np.testing.assert_allclose(np.asarray(new["w"]), [0.99, -1.99, 2.99], rtol=1e-5)
+
+
+def test_adamw_weight_decay_direction():
+    opt = AdamW(weight_decay=0.1)
+    params = {"w": jnp.array([10.0])}
+    grads = {"w": jnp.array([0.0])}
+    state = opt.init(params)
+    updates, _ = opt.update(grads, state, params, lr=0.1)
+    assert float(updates["w"][0]) < 0  # decays toward zero
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    np.testing.assert_allclose(float(norm), 5.0, rtol=1e-6)
+    total = jnp.sqrt(sum(jnp.sum(g**2) for g in jax.tree.leaves(clipped)))
+    np.testing.assert_allclose(float(total), 1.0, rtol=1e-5)
+    # under the limit: unchanged
+    clipped2, _ = clip_by_global_norm(grads, 100.0)
+    np.testing.assert_allclose(np.asarray(clipped2["a"]), [3.0])
+
+
+def test_schedule_warmup_then_decay():
+    lr = cosine_with_warmup(1.0, warmup=10, total=100)
+    vals = [float(lr(s)) for s in range(100)]
+    assert vals[0] < vals[5] < vals[9]  # warming up
+    assert abs(vals[10] - 1.0) < 0.02  # peak
+    assert vals[50] < vals[10] and vals[99] < vals[50]  # decaying
+    assert vals[99] >= 0.1 - 1e-6  # min_frac floor
+
+
+# ---------------------------------------------------------------------------
+def test_synthetic_data_deterministic():
+    src = SyntheticLM(vocab_size=1000, seq_len=16, global_batch=4, seed=3)
+    b1, b2 = src.batch_at(7), src.batch_at(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = src.batch_at(8)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    assert b1["tokens"].min() >= 0 and b1["tokens"].max() < 1000
+
+
+def test_pipeline_order_and_seek():
+    src = SyntheticLM(vocab_size=100, seq_len=8, global_batch=2, seed=0)
+    pipe = DataPipeline(lambda s: src.batch_at(s), prefetch=2)
+    s0, b0 = next(pipe)
+    s1, b1 = next(pipe)
+    assert (s0, s1) == (0, 1)
+    pipe.seek(10)
+    s10, b10 = next(pipe)
+    assert s10 == 10
+    np.testing.assert_array_equal(b10["tokens"], src.batch_at(10)["tokens"])
+    pipe.close()
+
+
+def test_pipeline_no_prefetch_mode():
+    src = SyntheticLM(vocab_size=100, seq_len=8, global_batch=2, seed=0)
+    pipe = DataPipeline(lambda s: src.batch_at(s), prefetch=0)
+    assert next(pipe)[0] == 0 and next(pipe)[0] == 1

@@ -1,0 +1,92 @@
+"""Perf-model unit tests: HLO collective parsing (incl. loop awareness) and
+roofline arithmetic."""
+import numpy as np
+
+from repro.perfmodel.costs import CompiledCosts
+from repro.perfmodel.hlo import CollectiveStats, collective_bytes, _shape_bytes
+from repro.perfmodel.roofline import model_flops, roofline
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[128,256]") == 128 * 256 * 4
+    assert _shape_bytes("bf16[2,2]{1,0}") == 8
+    assert _shape_bytes("(f32[4], bf16[8])") == 16 + 16
+    assert _shape_bytes("pred[]") == 1
+
+
+HLO_FLAT = """
+HloModule test
+
+ENTRY %main (p0: f32[64]) -> f32[64] {
+  %p0 = f32[64] parameter(0)
+  %ar = f32[64] all-reduce(%p0), replica_groups=[2,8]<=[16], to_apply=%add
+  ROOT %out = f32[64] copy(%ar)
+}
+"""
+
+
+def test_flat_all_reduce_accounting():
+    s = collective_bytes(HLO_FLAT)
+    assert s.op_counts["all-reduce"] == 1
+    # 64 f32 = 256B; ring: 2*B*(n-1)/n with n=8
+    np.testing.assert_allclose(s.per_device_bytes, 2 * 256 * 7 / 8)
+
+
+HLO_LOOP = """
+HloModule test
+
+%cond (arg: (s32[], f32[64])) -> pred[] {
+  %arg = (s32[], f32[64]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %k = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %k), direction=LT
+}
+
+%body (arg: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %arg = (s32[], f32[64]) parameter(0)
+  %x = f32[64] get-tuple-element(%arg), index=1
+  %ag = f32[64] all-gather(%x), replica_groups=[4,4]<=[16], dimensions={0}
+  %i = s32[] get-tuple-element(%arg), index=0
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[64]) tuple(%ip, %ag)
+}
+
+ENTRY %main (p0: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %p0 = (s32[], f32[64]) parameter(0)
+  ROOT %w = (s32[], f32[64]) while(%p0), condition=%cond, body=%body
+}
+"""
+
+
+def test_loop_aware_collective_multiplication():
+    s = collective_bytes(HLO_LOOP)
+    # the all-gather inside the 12-trip loop counts 12 times
+    assert s.op_counts["all-gather"] == 12
+    np.testing.assert_allclose(s.per_device_bytes, 12 * 256 * 3 / 4)
+
+
+def test_roofline_terms_and_dominance():
+    costs = CompiledCosts(
+        flops_per_device=197e12 * 0.5,  # 0.5 s of compute
+        bytes_per_device=819e9 * 0.25,  # 0.25 s of HBM
+        transcendentals=0,
+        arg_bytes=0, out_bytes=0, temp_bytes=0, alias_bytes=0, code_bytes=0,
+    )
+    coll = CollectiveStats(per_device_bytes=50e9 * 1.0)  # 1.0 s of ICI
+    rt = roofline(costs, coll, chips=256, kind="train",
+                  n_params_active=1e9, tokens=1e6)
+    assert rt.dominant == "collective"
+    np.testing.assert_allclose(rt.compute_s, 0.5)
+    np.testing.assert_allclose(rt.memory_s, 0.25)
+    np.testing.assert_allclose(rt.collective_s, 1.0)
+    # model flops: 6ND
+    assert rt.model_flops == 6e15
+    # fraction = (6e15 / (256*197e12)) / 1.0
+    np.testing.assert_allclose(rt.roofline_fraction, 6e15 / (256 * 197e12))
+
+
+def test_model_flops_kinds():
+    assert model_flops("train", 1e9, 100) == 6e11
+    assert model_flops("prefill", 1e9, 100) == 2e11
+    assert model_flops("decode", 1e9, 1) == 2e9

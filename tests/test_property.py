@@ -1,0 +1,134 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pchase import detect_plateaus, single_cycle_permutation
+from repro.core.throttle import T4_THROTTLE, ThrottleParams, simulate, steady_state_clock
+from repro.kernels import ops, ref
+
+FAST = settings(max_examples=20, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+@given(n=st.integers(4, 512), seed=st.integers(0, 1000))
+@FAST
+def test_single_cycle_permutation_is_one_cycle(n, seed):
+    perm = single_cycle_permutation(n, seed)
+    assert sorted(perm) == list(range(n))  # a permutation
+    idx, seen = 0, set()
+    for _ in range(n):
+        assert idx not in seen
+        seen.add(idx)
+        idx = int(perm[idx])
+    assert idx == 0 and len(seen) == n  # one full cycle
+
+
+@given(
+    caps=st.lists(st.integers(12, 24), min_size=1, max_size=3, unique=True),
+    lat0=st.floats(1.0, 10.0),
+    growth=st.floats(2.0, 6.0),
+)
+@FAST
+def test_plateau_detection_recovers_planted_hierarchy(caps, lat0, growth):
+    """Planted cache hierarchy -> detected capacities match exactly."""
+    caps = sorted(1 << c for c in caps)
+    sizes = np.array([1 << p for p in range(10, 27)])
+    lat = np.full(len(sizes), lat0)
+    for c in caps:
+        lat = np.where(sizes > c, lat * growth, lat)
+    plats = detect_plateaus(sizes, lat, rel_jump=0.3)
+    detected = [p.end_size for p in plats[:-1]]
+    expected = [c for c in caps if c < sizes[-1]]
+    assert detected == expected
+
+
+# ---------------------------------------------------------------------------
+@given(u=st.floats(0.3, 1.0))
+@FAST
+def test_throttle_invariants(u):
+    """Clock within [f_min, f_max]; sustained power never exceeds the limit
+    by more than the governor's one-step overshoot; temp bounded."""
+    out = simulate(T4_THROTTLE, utilization=u, duration_s=240, dt=0.5)
+    assert out["clock_hz"].max() <= T4_THROTTLE.f_max_hz + 1e-3
+    assert out["clock_hz"].min() >= 0.1 * T4_THROTTLE.f_max_hz - 1e-3
+    # steady state respects the power cap
+    assert out["power_w"][-20:].mean() <= T4_THROTTLE.power_limit_w * 1.05
+    assert out["temp_c"].max() <= T4_THROTTLE.max_temp_c + 8.0
+
+
+@given(u1=st.floats(0.4, 0.7), u2=st.floats(0.75, 1.0))
+@FAST
+def test_throttle_monotone_in_utilization(u1, u2):
+    """More utilization -> no higher steady-state clock."""
+    assert steady_state_clock(T4_THROTTLE, u2) <= steady_state_clock(T4_THROTTLE, u1) + 1e3
+
+
+# ---------------------------------------------------------------------------
+@given(
+    s=st.integers(8, 96),
+    hd=st.sampled_from([16, 32]),
+    causal=st.booleans(),
+    seed=st.integers(0, 99),
+)
+@settings(max_examples=15, deadline=None)
+def test_flash_attention_matches_oracle_property(s, hd, causal, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(1, s, 1, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, s, 1, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, s, 1, hd)).astype(np.float32))
+    got = ops.flash_attention(q, k, v, causal=causal, bq=32, bk=32)
+    want = ref.flash_attention_ref(
+        q[:, :, 0], k[:, :, 0], v[:, :, 0], causal=causal
+    )[:, :, None]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@given(
+    s=st.integers(4, 64),
+    chunk=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 99),
+)
+@settings(max_examples=15, deadline=None)
+def test_ssm_scan_matches_sequential_property(s, chunk, seed):
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(rng.normal(size=(1, s, 1, 8)).astype(np.float32))
+    a = -jnp.abs(jnp.asarray(rng.normal(size=(1, s, 1)).astype(np.float32))) * 0.3
+    B_ = jnp.asarray(rng.normal(size=(1, s, 4)).astype(np.float32))
+    C_ = jnp.asarray(rng.normal(size=(1, s, 4)).astype(np.float32))
+    got = ops.ssm_scan(u, a, B_, C_, chunk=chunk)[:, :, 0]
+    want = ref.ssm_scan_ref(u[:, :, 0], a[:, :, 0], B_, C_)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+@given(
+    b=st.integers(1, 3),
+    s=st.integers(2, 16),
+    seed=st.integers(0, 50),
+)
+@settings(max_examples=10, deadline=None)
+def test_moe_conservation_property(b, s, seed):
+    """With ample capacity, MoE output == dense-dispatch oracle, and router
+    weights per token sum to 1 (conservation)."""
+    from repro.configs import get_config
+    from repro.models.mlp import moe_block, moe_block_dense, moe_init
+
+    cfg = get_config("olmoe-1b-7b").reduced().replace(capacity_factor=16.0)
+    p = moe_init(jax.random.key(seed), cfg)
+    x = jax.random.normal(jax.random.key(seed + 1), (b, s, cfg.d_model))
+    y1, a1 = moe_block(p, x, cfg)
+    y2, a2 = moe_block_dense(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(float(a1), float(a2), rtol=1e-5)
+
+
+@given(seed=st.integers(0, 100), steps=st.integers(1, 500))
+@FAST
+def test_pchase_kernel_walk_property(seed, steps):
+    from repro.core.pchase import single_cycle_permutation
+
+    perm = single_cycle_permutation(128, seed)
+    got = int(ops.pchase(jnp.asarray(perm), steps)[0, 0])
+    assert got == ref.pchase_ref(perm, steps)

@@ -1,22 +1,12 @@
-"""Tab 4.2 / Fig 4.1 analogue — update throughput under contention.
+"""Deprecated shim — ported to ``repro.bench.suites.atomics`` (Tab 4.2 / Fig 4.1).
 
-TPU has no hardware atomics; colliding scatter-adds serialize inside the
-XLA scatter, so throughput vs. collision multiplicity plays the role of the
-paper's atomicAdd contention scenarios."""
-from __future__ import annotations
+Kept so ``from benchmarks import bench_atomics; bench_atomics.run()`` keeps returning
+the old CSV-row dicts; new callers should use the registry path:
 
-from repro.core import probes
+    python -m repro.bench run --only atomics
+"""
+from repro.bench.compat import legacy_rows
 
 
-def run(quick: bool = True) -> list[dict]:
-    res = probes.probe_scatter_contention(
-        n_updates=1 << (14 if quick else 18), collisions=(1, 2, 4, 8, 16, 32)
-    )
-    return [
-        {
-            "name": f"scatter_contention_x{c}",
-            "us_per_call": res.meta["n_updates"] / (r * 1e6) if r else 0.0,
-            "derived": f"{r:.2f} Mupdates/s",
-        }
-        for c, r in zip(res.x, res.y)
-    ]
+def run(quick: bool = True, **overrides) -> list:
+    return legacy_rows("atomics", quick=quick, **overrides)

@@ -1,61 +1,12 @@
-"""Fig 1.1 analogue — `?axpy` access-width sweep.
+"""Deprecated shim — ported to ``repro.bench.suites.axpy`` (Fig 1.1).
 
-The paper: cublasSaxpy's 64-bit loads vs. hand-vectorized 128-bit loads ->
-~2x on large arrays.  TPU restatement: the bandwidth-bound axpy kernel swept
-over VMEM tile widths (narrow tiles under-utilize the HBM streaming path the
-way narrow loads under-utilized Turing's LSUs), plus the XLA-fused baseline
-(the "library" implementation).
+Kept so ``from benchmarks import bench_axpy; bench_axpy.run()`` keeps returning
+the old CSV-row dicts; new callers should use the registry path:
 
-Measured for real on the host backend; the modeled TPU columns come from the
-HardwareModel bandwidth term.
+    python -m repro.bench run --only axpy
 """
-from __future__ import annotations
-
-import jax.numpy as jnp
-
-from repro.core.hwmodel import TPU_V5E
-from repro.core.timing import time_fn
-from repro.kernels import ops
+from repro.bench.compat import legacy_rows
 
 
-def run(sizes=(1 << 18, 1 << 20), widths=(128, 256, 512, 1024)) -> list[dict]:
-    rows = []
-    for n in sizes:
-        cols_base = 512
-        r = n // cols_base
-        x = jnp.ones((r, cols_base), jnp.float32)
-        y = jnp.ones((r, cols_base), jnp.float32)
-        import jax
-
-        t_lib = time_fn(jax.jit(lambda a, b: 2.5 * a + b), x, y, warmup=2, reps=5)
-        bytes_moved = 3 * n * 4
-        rows.append(
-            {
-                "name": f"axpy_xla_baseline_n{n}",
-                "us_per_call": t_lib.min_s * 1e6,
-                "derived": f"{bytes_moved / t_lib.min_s / 1e9:.2f} GB/s",
-            }
-        )
-        for w in widths:
-            r2 = n // w
-            xv = jnp.ones((r2, w), jnp.float32)
-            yv = jnp.ones((r2, w), jnp.float32)
-            t = time_fn(
-                ops.axpy, xv, yv, 2.5, block_rows=8, block_cols=w, warmup=2, reps=5
-            )
-            rows.append(
-                {
-                    "name": f"axpy_pallas_n{n}_w{w}",
-                    "us_per_call": t.min_s * 1e6,
-                    "derived": f"{bytes_moved / t.min_s / 1e9:.2f} GB/s",
-                }
-            )
-        # modeled TPU: bandwidth-bound time at 819 GB/s
-        rows.append(
-            {
-                "name": f"axpy_tpu_modeled_n{n}",
-                "us_per_call": bytes_moved / TPU_V5E.main_memory_Bps * 1e6,
-                "derived": f"{TPU_V5E.main_memory_Bps / 1e9:.0f} GB/s bound",
-            }
-        )
-    return rows
+def run(quick: bool = True, **overrides) -> list:
+    return legacy_rows("axpy", quick=quick, **overrides)

@@ -1,38 +1,12 @@
-"""Tab 3.2 / Tab 3.4 / Fig 3.12 / Fig 3.13 analogue — per-level streaming
-bandwidth + block-shape (access-width) sweep."""
-from __future__ import annotations
+"""Deprecated shim — ported to ``repro.bench.suites.bandwidth`` (Tab 3.2/3.4, Fig 3.12/3.13).
 
-from repro.core import probes
-from repro.core.hwmodel import TPU_V5E
+Kept so ``from benchmarks import bench_bandwidth; bench_bandwidth.run()`` keeps returning
+the old CSV-row dicts; new callers should use the registry path:
+
+    python -m repro.bench run --only bandwidth
+"""
+from repro.bench.compat import legacy_rows
 
 
-def run(quick: bool = True) -> list[dict]:
-    rows = []
-    res = probes.probe_stream_bandwidth([1 << p for p in range(18, 24 if quick else 28)])
-    for f, bw in zip(res.x, res.y):
-        rows.append(
-            {
-                "name": f"streambw_host_{f >> 20}MiB",
-                "us_per_call": f / (bw * 1e9) * 1e6,
-                "derived": f"{bw:.2f} GB/s",
-            }
-        )
-    blk = probes.probe_block_shape_bandwidth(footprint=1 << 22)
-    for w, bw in zip(blk.x, blk.y):
-        rows.append(
-            {
-                "name": f"axpybw_host_width{w}",
-                "us_per_call": (1 << 22) * 12 / (bw * 1e9) * 1e6,
-                "derived": f"{bw:.2f} GB/s",
-            }
-        )
-    for lvl in TPU_V5E.levels:
-        if lvl.bandwidth_Bps:
-            rows.append(
-                {
-                    "name": f"streambw_tpu_model_{lvl.name}",
-                    "us_per_call": 0.0,
-                    "derived": f"{lvl.bandwidth_Bps / 1e9:.0f} GB/s",
-                }
-            )
-    return rows
+def run(quick: bool = True, **overrides) -> list:
+    return legacy_rows("bandwidth", quick=quick, **overrides)

@@ -1,50 +1,12 @@
-"""Fig 4.2 / Tab 4.3 analogue — matmul arithmetic throughput across dtypes
-and sizes (Tensor Core study -> MXU study).
+"""Deprecated shim — ported to ``repro.bench.suites.gemm`` (Fig 4.2 / Tab 4.3).
 
-Host-measured XLA + Pallas-interpret numbers validate the harness; the
-modeled TPU columns report the roofline-bounded MXU throughput from the
-HardwareModel, including the paper-table comparison (T4 measured peaks from
-Tab 4.3 encoded in T4_PAPER)."""
-from __future__ import annotations
+Kept so ``from benchmarks import bench_gemm; bench_gemm.run()`` keeps returning
+the old CSV-row dicts; new callers should use the registry path:
 
-from repro.core import probes
-from repro.core.autotune import choose_matmul_tiles
-from repro.core.hwmodel import T4_PAPER, TPU_V5E
+    python -m repro.bench run --only gemm
+"""
+from repro.bench.compat import legacy_rows
 
 
-def run(quick: bool = True) -> list[dict]:
-    sizes = (256, 512) if quick else (256, 512, 1024, 2048)
-    res = probes.probe_matmul_throughput(sizes=sizes, dtypes=("float32",))
-    rows = [
-        {
-            "name": f"gemm_host_{key}",
-            "us_per_call": 2 * int(key.split(":")[1]) ** 3 / (g * 1e9) * 1e6,
-            "derived": f"{g:.1f} GFLOP/s",
-        }
-        for key, g in zip(res.x, res.y)
-    ]
-    # modeled TPU v5e MXU roofline per dtype/size
-    for dt in ("bfloat16", "int8"):
-        peak = TPU_V5E.peak(dt)
-        for n in (1024, 4096, 8192):
-            flops = 2 * n**3
-            eb = 2 if dt == "bfloat16" else 1
-            t = max(flops / peak, 3 * n * n * eb / TPU_V5E.main_memory_Bps)
-            tile = choose_matmul_tiles(n, n, n, dt if dt != "int8" else "int8")
-            rows.append(
-                {
-                    "name": f"gemm_tpu_model_{dt}_{n}",
-                    "us_per_call": t * 1e6,
-                    "derived": f"{flops / t / 1e12:.1f} TFLOP/s tiles=({tile.bm},{tile.bk},{tile.bn})",
-                }
-            )
-    # paper cross-check rows (T4 Tab 4.3 measured values)
-    for dt, v in T4_PAPER.peak_flops.items():
-        rows.append(
-            {
-                "name": f"gemm_t4_paper_{dt}",
-                "us_per_call": 0.0,
-                "derived": f"{v / 1e12:.2f} TFLOP/s (paper Tab 4.3)",
-            }
-        )
-    return rows
+def run(quick: bool = True, **overrides) -> list:
+    return legacy_rows("gemm", quick=quick, **overrides)

@@ -1,28 +1,12 @@
-"""Tab 4.1 analogue — dependent-issue op latency table.
+"""Deprecated shim — ported to ``repro.bench.suites.instr`` (Tab 4.1).
 
-The paper measures SASS instruction latencies with control-word stall
-tuning; the TPU/JAX analogue is a dependent-chain per-primitive latency
-(chain of fori_loop iterations, loop overhead subtracted)."""
-from __future__ import annotations
+Kept so ``from benchmarks import bench_instr; bench_instr.run()`` keeps returning
+the old CSV-row dicts; new callers should use the registry path:
 
-from repro.core import probes
+    python -m repro.bench run --only instr
+"""
+from repro.bench.compat import legacy_rows
 
 
-def run(quick: bool = True) -> list[dict]:
-    res = probes.probe_op_latency(chain=1024 if quick else 8192)
-    rows = [
-        {
-            "name": f"oplat_{name}",
-            "us_per_call": lat * 1e-3,
-            "derived": f"{lat:.2f} ns dependent-issue",
-        }
-        for name, lat in zip(res.x, res.y)
-    ]
-    rows.append(
-        {
-            "name": "oplat_loop_overhead",
-            "us_per_call": res.meta["base_ns"] * 1e-3,
-            "derived": f"{res.meta['base_ns']:.2f} ns baseline",
-        }
-    )
-    return rows
+def run(quick: bool = True, **overrides) -> list:
+    return legacy_rows("instr", quick=quick, **overrides)

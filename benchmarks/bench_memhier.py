@@ -1,47 +1,12 @@
-"""Fig 3.5 / Tab 3.1 / Fig 3.6 analogue — memory-hierarchy dissection via
-fine-grained pointer chase.
+"""Deprecated shim — ported to ``repro.bench.suites.memhier`` (Fig 3.5 / Tab 3.1).
 
-Measured on the live backend (recovers the HOST's L1/L2/L3/DRAM — the
-end-to-end validation of the Mei&Chu methodology), plus the modeled TPU v5e
-hierarchy (VMEM/HBM) from the HardwareModel.
+Kept so ``from benchmarks import bench_memhier; bench_memhier.run()`` keeps returning
+the old CSV-row dicts; new callers should use the registry path:
+
+    python -m repro.bench run --only memhier
 """
-from __future__ import annotations
-
-import numpy as np
-
-from repro.core import probes
-from repro.core.dissect import _predict_pchase
-from repro.core.hwmodel import TPU_V5E
+from repro.bench.compat import legacy_rows
 
 
-def run(quick: bool = True) -> list[dict]:
-    sizes = [1 << p for p in range(12, 25 if quick else 28)]
-    res = probes.probe_pointer_chase(sizes, steps=1 << 14)
-    plats, caps = probes.analyze_pointer_chase(res)
-    rows = [
-        {
-            "name": f"pchase_host_{s >> 10}KiB",
-            "us_per_call": lat * 1e-3,  # ns -> us per load
-            "derived": f"{lat:.2f} ns/load",
-        }
-        for s, lat in zip(res.x, res.y)
-    ]
-    for i, p in enumerate(plats):
-        rows.append(
-            {
-                "name": f"pchase_host_level{i}",
-                "us_per_call": p.latency * 1e-3,
-                "derived": f"capacity~{p.end_size >> 10}KiB latency {p.latency:.2f}ns",
-            }
-        )
-    # modeled TPU hierarchy
-    tpu_lat = _predict_pchase(TPU_V5E, sizes)
-    for lvl in TPU_V5E.levels:
-        rows.append(
-            {
-                "name": f"pchase_tpu_model_{lvl.name}",
-                "us_per_call": lvl.latency_ns * 1e-3,
-                "derived": f"size {lvl.size_bytes >> 20}MiB lat {lvl.latency_ns:.0f}ns",
-            }
-        )
-    return rows
+def run(quick: bool = True, **overrides) -> list:
+    return legacy_rows("memhier", quick=quick, **overrides)

@@ -1,24 +1,12 @@
-"""Tab 2.1 analogue — work-unit <-> execution-unit mapping.
+"""Deprecated shim — ported to ``repro.bench.suites.scheduler`` (Tab 2.1).
 
-The paper shows warps colliding on a Turing scheduler (same index mod 4)
-halve throughput.  TPU grid cells execute sequentially on the core, so
-throughput/program must stay FLAT — this probe demonstrates that contrast
-(and catches any surprise serialization cliffs)."""
-from __future__ import annotations
+Kept so ``from benchmarks import bench_scheduler; bench_scheduler.run()`` keeps returning
+the old CSV-row dicts; new callers should use the registry path:
 
-from repro.core import probes
+    python -m repro.bench run --only scheduler
+"""
+from repro.bench.compat import legacy_rows
 
 
-def run(quick: bool = True) -> list[dict]:
-    res = probes.probe_grid_occupancy(
-        rows_per_program=64 if quick else 256, programs=(1, 2, 3, 4, 6, 8)
-    )
-    base = res.y[0] or 1.0
-    return [
-        {
-            "name": f"grid_occupancy_p{p}",
-            "us_per_call": 0.0,
-            "derived": f"{bw:.2f} GB/s ({bw / base:.2f}x of 1-program)",
-        }
-        for p, bw in zip(res.x, res.y)
-    ]
+def run(quick: bool = True, **overrides) -> list:
+    return legacy_rows("scheduler", quick=quick, **overrides)

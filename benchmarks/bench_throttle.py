@@ -1,53 +1,12 @@
-"""Fig 4.3 / 4.4 / 4.5 analogue — clock throttling under sustained load.
+"""Deprecated shim — ported to ``repro.bench.suites.throttle`` (Fig 4.3-4.5).
 
-Runs the fitted power/thermal governor model for the paper's T4
-parameterization (validating the published curve shape: brief full clock ->
-power-limit plateau -> thermal step at 85 C) and for the TPU v5e envelope
-used by the straggler detector."""
-from __future__ import annotations
+Kept so ``from benchmarks import bench_throttle; bench_throttle.run()`` keeps returning
+the old CSV-row dicts; new callers should use the registry path:
 
-import numpy as np
-
-from repro.core.throttle import T4_THROTTLE, V5E_THROTTLE, simulate, steady_state_clock
+    python -m repro.bench run --only throttle
+"""
+from repro.bench.compat import legacy_rows
 
 
-def run(quick: bool = True) -> list[dict]:
-    rows = []
-    for name, p in (("t4", T4_THROTTLE), ("v5e", V5E_THROTTLE)):
-        out = simulate(p, utilization=1.0, duration_s=300, dt=0.5)
-        clock, temp, power = out["clock_hz"], out["temp_c"], out["power_w"]
-        # time to first 5% derate (paper: "only a few seconds at full clock")
-        idx = np.argmax(clock < 0.95 * p.f_max_hz)
-        t_derate = out["t"][idx] if clock.min() < 0.95 * p.f_max_hz else float("inf")
-        rows += [
-            {
-                "name": f"throttle_{name}_time_to_derate",
-                "us_per_call": t_derate * 1e6,
-                "derived": f"{t_derate:.1f}s at full clock",
-            },
-            {
-                "name": f"throttle_{name}_steady_clock",
-                "us_per_call": 0.0,
-                "derived": f"{clock[-1] / 1e6:.0f} MHz (max {p.f_max_hz / 1e6:.0f})",
-            },
-            {
-                "name": f"throttle_{name}_steady_power",
-                "us_per_call": 0.0,
-                "derived": f"{power[-40:].mean():.1f} W (limit {p.power_limit_w:.0f})",
-            },
-            {
-                "name": f"throttle_{name}_max_temp",
-                "us_per_call": 0.0,
-                "derived": f"{temp.max():.1f} C (cap {p.max_temp_c:.0f})",
-            },
-        ]
-        for u in (0.6, 0.8, 1.0):
-            f = steady_state_clock(p, u)
-            rows.append(
-                {
-                    "name": f"throttle_{name}_clock_u{int(u * 100)}",
-                    "us_per_call": 0.0,
-                    "derived": f"{f / 1e6:.0f} MHz sustained at {u:.0%} util",
-                }
-            )
-    return rows
+def run(quick: bool = True, **overrides) -> list:
+    return legacy_rows("throttle", quick=quick, **overrides)

@@ -1,69 +1,44 @@
-"""Benchmark harness — one module per paper table/figure.
+"""Deprecated CSV harness — superseded by ``python -m repro.bench``.
 
-Prints ``name,us_per_call,derived`` CSV.  ``--full`` widens sweeps;
-``--only <prefix>`` filters.
-
-Table map (paper -> module):
-    Fig 1.1          bench_axpy        access-width sweep on bandwidth-bound axpy
-    Tab 2.1          bench_scheduler   work-unit/execution-unit occupancy
-    Fig 3.5/Tab 3.1  bench_memhier     pointer-chase hierarchy dissection
-    Tab 3.2/3.4,
-    Fig 3.12/3.13    bench_bandwidth   per-level streaming bandwidth
-    Tab 4.1          bench_instr       dependent-issue op latency
-    Tab 4.2/Fig 4.1  bench_atomics     scatter contention
-    Fig 4.2/Tab 4.3  bench_gemm        matmul throughput across dtypes
-    Fig 4.3-4.5      bench_throttle    power/thermal clock governor
+The benchmarks now live in ``repro.bench.suites`` behind the registry and
+emit schema-versioned JSON (see ``python -m repro.bench run --help``).  This
+entry point keeps the old ``name,us_per_call,derived`` CSV contract (plus
+``--full`` / ``--only``) for existing consumers by delegating to the runner.
 """
 from __future__ import annotations
 
 import argparse
 import sys
 
-from . import (
-    bench_atomics,
-    bench_axpy,
-    bench_bandwidth,
-    bench_gemm,
-    bench_instr,
-    bench_memhier,
-    bench_scheduler,
-    bench_throttle,
-)
+from repro.bench.compat import legacy_row
+from repro.bench.runner import run_benchmarks
 
-MODULES = [
-    ("axpy", bench_axpy),
-    ("memhier", bench_memhier),
-    ("bandwidth", bench_bandwidth),
-    ("instr", bench_instr),
-    ("atomics", bench_atomics),
-    ("gemm", bench_gemm),
-    ("throttle", bench_throttle),
-    ("scheduler", bench_scheduler),
+# the eight modules the old harness ran, in its order of appearance; newer
+# registrations (e.g. `dissect`) are NOT part of the legacy CSV contract
+LEGACY_NAMES = [
+    "axpy", "memhier", "bandwidth", "instr",
+    "atomics", "gemm", "throttle", "scheduler",
 ]
 
 
-def main(argv=None) -> None:
-    ap = argparse.ArgumentParser()
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
     args = ap.parse_args(argv)
 
+    result = run_benchmarks(
+        only=[args.only] if args.only else LEGACY_NAMES,
+        mode="full" if args.full else "quick",
+    )
     print("name,us_per_call,derived")
-    for name, mod in MODULES:
-        if args.only and not name.startswith(args.only):
-            continue
-        try:
-            if name == "axpy":
-                rows = mod.run()
-            else:
-                rows = mod.run(quick=not args.full)
-        except Exception as e:  # noqa: BLE001
-            print(f"{name}_ERROR,0,{type(e).__name__}: {e}", file=sys.stdout)
-            continue
-        for r in rows:
-            derived = str(r["derived"]).replace(",", ";")
-            print(f"{r['name']},{r['us_per_call']:.3f},{derived}")
+    for r in result.records:
+        row = legacy_row(r)
+        print(f"{row['name']},{row['us_per_call']:.3f},{row['derived'].replace(',', ';')}")
+    for name, err in sorted(result.errors.items()):
+        print(f"{name}_ERROR,0,{err.replace(',', ';')}")
+    return 1 if result.errors else 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -5,7 +5,6 @@ print a Table-3.1-style report, then show what the knowledge buys you
     PYTHONPATH=src python examples/dissect_hardware.py [--full]
 """
 import argparse
-import json
 
 from repro.core.autotune import choose_matmul_tiles, matmul_time_model
 from repro.core.dissect import dissect_measure, dissect_model

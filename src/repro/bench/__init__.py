@@ -1,0 +1,43 @@
+"""repro.bench — unified benchmark subsystem.
+
+The paper's methodology, made systematic: every paper-table benchmark
+registers with :mod:`repro.core.registry` (``@bench.register`` with paper
+ref + quick/full sweep grids), the runner executes them into one versioned
+JSON schema (:mod:`.schema`), and the baseline store (:mod:`.baseline`)
+gates regressions in CI.
+
+    python -m repro.bench list
+    python -m repro.bench run --quick --out results.json
+    python -m repro.bench compare results.json benchmarks/baselines/
+"""
+from repro.core.registry import BenchSpec, register
+
+from .baseline import CompareReport, compare, compare_files, load_baselines, write_baselines
+from .runner import load_suites, run_benchmarks, select
+from .schema import (
+    SCHEMA_VERSION,
+    BenchRecord,
+    BenchResult,
+    EnvFingerprint,
+    SchemaError,
+    validate_result,
+)
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "BenchRecord",
+    "BenchResult",
+    "BenchSpec",
+    "CompareReport",
+    "EnvFingerprint",
+    "SchemaError",
+    "compare",
+    "compare_files",
+    "load_baselines",
+    "load_suites",
+    "register",
+    "run_benchmarks",
+    "select",
+    "validate_result",
+    "write_baselines",
+]

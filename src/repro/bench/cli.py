@@ -1,0 +1,140 @@
+"""``python -m repro.bench`` — run | list | compare | baseline.
+
+    run       execute registered benchmarks, write schema-versioned JSON
+    list      show registered benchmarks with paper refs and sweep grids
+    compare   gate a results file against the checked-in baselines
+    baseline  (re)generate baseline files from a results file
+
+Exit codes: ``run`` is non-zero if any benchmark errored; ``compare`` is
+non-zero if the gate fails (unless ``--warn-only``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.core import registry
+
+from . import baseline as bl
+from . import runner
+from .schema import BenchResult, SchemaError
+
+
+def _cmd_list(args) -> int:
+    runner.load_suites()
+    specs = registry.specs()
+    if args.json:
+        print(
+            json.dumps(
+                [
+                    {
+                        "name": s.name,
+                        "paper_ref": s.paper_ref,
+                        "description": s.description,
+                        "quick": s.quick,
+                        "full": s.full,
+                    }
+                    for s in specs
+                ],
+                indent=2,
+                default=str,
+            )
+        )
+        return 0
+    w = max((len(s.name) for s in specs), default=4)
+    for s in specs:
+        print(f"{s.name:<{w}}  {s.paper_ref:<24}  {s.description}")
+    return 0
+
+
+def _cmd_run(args) -> int:
+    mode = "full" if args.full else "quick"
+    if args.only and not runner.select(args.only):
+        print(
+            f"error: --only {' '.join(args.only)} matches no registered benchmark "
+            f"(have: {', '.join(runner.select())})",
+            file=sys.stderr,
+        )
+        return 2
+    result = runner.run_benchmarks(
+        only=args.only or None, mode=mode, out_path=args.out, verbose=args.verbose
+    )
+    if args.csv:
+        print("name,value,unit,derived")
+        for r in result.records:
+            print(f"{r.name},{r.value:.4f},{r.unit},{r.info.replace(',', ';')}")
+    elif not args.out:
+        print(result.to_json())
+    else:
+        print(
+            f"wrote {args.out}: {len(result.records)} records from "
+            f"{len(result.benchmarks())} benchmarks, {len(result.errors)} errors"
+        )
+    for name, err in sorted(result.errors.items()):
+        print(f"ERROR {name}: {err}", file=sys.stderr)
+    return 1 if result.errors else 0
+
+
+def _cmd_compare(args) -> int:
+    report = bl.compare_files(
+        args.results, args.baselines, threshold_scale=args.threshold_scale
+    )
+    if args.json:
+        print(json.dumps(report.to_dict(), indent=2))
+    else:
+        print(report.format())
+    if args.warn_only:
+        return 0
+    return 0 if report.passed else 1
+
+
+def _cmd_baseline(args) -> int:
+    result = BenchResult.load(args.results)
+    paths = bl.write_baselines(result, args.out_dir)
+    for p in paths:
+        print(f"wrote {p}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.bench", description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("list", help="show registered benchmarks")
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=_cmd_list)
+
+    p = sub.add_parser("run", help="execute benchmarks, emit JSON results")
+    g = p.add_mutually_exclusive_group()
+    g.add_argument("--quick", action="store_true", help="quick grids (default)")
+    g.add_argument("--full", action="store_true", help="full paper-scale grids")
+    p.add_argument("--only", nargs="*", help="benchmark name prefixes to run")
+    p.add_argument("--out", help="write JSON results to this path")
+    p.add_argument("--csv", action="store_true", help="print legacy CSV to stdout")
+    p.add_argument("-v", "--verbose", action="store_true")
+    p.set_defaults(fn=_cmd_run)
+
+    p = sub.add_parser("compare", help="gate results against baselines")
+    p.add_argument("results", help="results JSON from `run --out`")
+    p.add_argument("baselines", help="baseline directory (benchmarks/baselines/)")
+    p.add_argument("--threshold-scale", type=float, default=1.0)
+    p.add_argument("--warn-only", action="store_true", help="report but exit 0")
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=_cmd_compare)
+
+    p = sub.add_parser("baseline", help="write baseline files from results")
+    p.add_argument("results")
+    p.add_argument("--out-dir", default="benchmarks/baselines")
+    p.set_defaults(fn=_cmd_baseline)
+
+    args = ap.parse_args(argv)
+    try:
+        return args.fn(args)
+    except (SchemaError, FileNotFoundError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,71 @@
+"""Benchmark runner: execute registered benchmarks, collect a BenchResult.
+
+Importing :mod:`repro.bench.suites` (done lazily here) registers every
+paper-table benchmark; the runner then executes the requested subset with the
+grid for the requested mode and assembles one schema-versioned result.  A
+benchmark that raises is recorded in ``result.errors`` and does not abort the
+rest of the run.
+"""
+from __future__ import annotations
+
+import time
+import traceback
+from typing import Optional, Sequence
+
+from repro.core import registry
+
+from .schema import BenchResult, EnvFingerprint
+
+
+def load_suites() -> None:
+    """Import the suite package (idempotent registration side effect)."""
+    from . import suites  # noqa: F401
+
+
+def select(only: Optional[Sequence[str]] = None) -> list:
+    """Registered benchmark names, optionally filtered by prefix list."""
+    load_suites()
+    names = registry.names()
+    if only:
+        names = [n for n in names if any(n.startswith(p) for p in only)]
+    return names
+
+
+def run_benchmarks(
+    only: Optional[Sequence[str]] = None,
+    mode: str = "quick",
+    out_path: Optional[str] = None,
+    verbose: bool = False,
+) -> BenchResult:
+    names = select(only)
+    records, errors, timings = [], {}, {}
+    for name in names:
+        spec = registry.get(name)
+        t0 = time.perf_counter()
+        try:
+            recs = spec.run(mode)
+        except Exception as e:
+            errors[name] = f"{type(e).__name__}: {e}"
+            if verbose:
+                traceback.print_exc()
+            continue
+        finally:
+            timings[name] = time.perf_counter() - t0
+        for r in recs:
+            if r.benchmark != name:
+                errors[name] = f"record {r.name!r} claims benchmark {r.benchmark!r}"
+                break
+        else:
+            records.extend(recs)
+        if verbose:
+            print(f"  {name}: {len(recs)} records in {timings[name]:.1f}s")
+    result = BenchResult(
+        mode=mode,
+        env=EnvFingerprint.capture(),
+        records=records,
+        errors=errors,
+        timings=timings,
+    )
+    if out_path:
+        result.save(out_path)
+    return result

@@ -1,0 +1,34 @@
+"""Tab 4.2 / Fig 4.1 analogue — update throughput under contention.
+
+TPU has no hardware atomics; colliding scatter-adds serialize inside the
+XLA scatter, so throughput vs. collision multiplicity plays the role of the
+paper's atomicAdd contention scenarios."""
+from __future__ import annotations
+
+from repro.core import probes
+from repro.core.registry import register
+
+from ..schema import BenchRecord
+
+
+@register(
+    "atomics",
+    paper_ref="Tab 4.2 / Fig 4.1",
+    description="scatter-add contention",
+    quick={"n_updates": 1 << 14, "collisions": (1, 2, 4, 8, 16, 32)},
+    full={"n_updates": 1 << 18, "collisions": (1, 2, 4, 8, 16, 32)},
+)
+def bench_atomics(n_updates=1 << 14, collisions=(1, 2, 4, 8, 16, 32)) -> list:
+    res = probes.probe_scatter_contention(n_updates=n_updates, collisions=collisions)
+    return [
+        BenchRecord(
+            name=f"scatter_contention_x{c}",
+            benchmark="atomics",
+            x=c,
+            value=r,
+            unit="Mupdates/s",
+            metrics={"us_per_call": n_updates / (r * 1e6) if r else 0.0},
+            info=f"{c} colliding updates per address",
+        )
+        for c, r in zip(res.x, res.y)
+    ]

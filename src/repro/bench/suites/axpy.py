@@ -1,0 +1,78 @@
+"""Fig 1.1 analogue — `?axpy` access-width sweep.
+
+The paper: cublasSaxpy's 64-bit loads vs. hand-vectorized 128-bit loads ->
+~2x on large arrays.  TPU restatement: the bandwidth-bound axpy kernel swept
+over VMEM tile widths (narrow tiles under-utilize the HBM streaming path the
+way narrow loads under-utilized Turing's LSUs), plus the XLA-fused baseline
+(the "library" implementation) and the HardwareModel-predicted TPU bound.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hwmodel import TPU_V5E
+from repro.core.registry import register
+from repro.core.timing import time_fn
+from repro.kernels import ops
+
+from ..schema import BenchRecord
+
+
+@register(
+    "axpy",
+    paper_ref="Fig 1.1",
+    description="access-width sweep on bandwidth-bound axpy",
+    quick={"sizes": (1 << 18, 1 << 20), "widths": (128, 256, 512, 1024)},
+    full={"sizes": (1 << 18, 1 << 20, 1 << 22), "widths": (128, 256, 512, 1024, 2048)},
+)
+def bench_axpy(sizes=(1 << 18, 1 << 20), widths=(128, 256, 512, 1024)) -> list:
+    recs = []
+    for n in sizes:
+        cols_base = 512
+        x = jnp.ones((n // cols_base, cols_base), jnp.float32)
+        y = jnp.ones((n // cols_base, cols_base), jnp.float32)
+        bytes_moved = 3 * n * 4  # 2 reads + 1 write
+
+        t_lib = time_fn(jax.jit(lambda a, b: 2.5 * a + b), x, y, warmup=2, reps=5)
+        recs.append(
+            BenchRecord(
+                name=f"axpy_xla_baseline_n{n}",
+                benchmark="axpy",
+                x=n,
+                value=bytes_moved / t_lib.min_s / 1e9,
+                unit="GB/s",
+                metrics={"us_per_call": t_lib.min_s * 1e6},
+                info="XLA-fused library baseline",
+            )
+        )
+        for w in widths:
+            xv = jnp.ones((n // w, w), jnp.float32)
+            yv = jnp.ones((n // w, w), jnp.float32)
+            t = time_fn(
+                ops.axpy, xv, yv, 2.5, block_rows=8, block_cols=w, warmup=2, reps=5
+            )
+            recs.append(
+                BenchRecord(
+                    name=f"axpy_pallas_n{n}_w{w}",
+                    benchmark="axpy",
+                    x=w,
+                    value=bytes_moved / t.min_s / 1e9,
+                    unit="GB/s",
+                    metrics={"us_per_call": t.min_s * 1e6, "size": n},
+                    info=f"Pallas tile width {w}",
+                )
+            )
+        recs.append(
+            BenchRecord(
+                name=f"axpy_tpu_modeled_n{n}",
+                benchmark="axpy",
+                x=n,
+                value=TPU_V5E.main_memory_Bps / 1e9,
+                unit="GB/s",
+                measured=False,
+                metrics={"us_per_call": bytes_moved / TPU_V5E.main_memory_Bps * 1e6},
+                info="HBM-bandwidth-bound TPU v5e model",
+            )
+        )
+    return recs

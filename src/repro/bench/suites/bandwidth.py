@@ -1,0 +1,58 @@
+"""Tab 3.2 / Tab 3.4 / Fig 3.12 / Fig 3.13 analogue — per-level streaming
+bandwidth + block-shape (access-width) sweep."""
+from __future__ import annotations
+
+from repro.core import probes
+from repro.core.hwmodel import TPU_V5E
+from repro.core.registry import register
+
+from ..schema import BenchRecord
+
+
+@register(
+    "bandwidth",
+    paper_ref="Tab 3.2/3.4, Fig 3.12/3.13",
+    description="per-level streaming bandwidth",
+    quick={"min_pow": 18, "max_pow": 24, "block_footprint": 1 << 22},
+    full={"min_pow": 18, "max_pow": 28, "block_footprint": 1 << 22},
+)
+def bench_bandwidth(min_pow=18, max_pow=24, block_footprint=1 << 22) -> list:
+    recs = []
+    res = probes.probe_stream_bandwidth([1 << p for p in range(min_pow, max_pow)])
+    for f, bw in zip(res.x, res.y):
+        recs.append(
+            BenchRecord(
+                name=f"streambw_host_{f >> 10}KiB",
+                benchmark="bandwidth",
+                x=f,
+                value=bw,
+                unit="GB/s",
+                metrics={"us_per_call": f / (bw * 1e9) * 1e6},
+            )
+        )
+    blk = probes.probe_block_shape_bandwidth(footprint=block_footprint)
+    for w, bw in zip(blk.x, blk.y):
+        recs.append(
+            BenchRecord(
+                name=f"axpybw_host_width{w}",
+                benchmark="bandwidth",
+                x=w,
+                value=bw,
+                unit="GB/s",
+                metrics={"us_per_call": block_footprint * 12 / (bw * 1e9) * 1e6},
+            )
+        )
+    for lvl in TPU_V5E.levels:
+        if lvl.bandwidth_Bps:
+            recs.append(
+                BenchRecord(
+                    name=f"streambw_tpu_model_{lvl.name}",
+                    benchmark="bandwidth",
+                    x=lvl.name,
+                    value=lvl.bandwidth_Bps / 1e9,
+                    unit="GB/s",
+                    measured=False,
+                    info=f"{lvl.name} modeled sustained bandwidth",
+                )
+            )
+    return recs

@@ -1,0 +1,71 @@
+"""Fig 4.2 / Tab 4.3 analogue — matmul arithmetic throughput across dtypes
+and sizes (Tensor Core study -> MXU study).
+
+Host-measured XLA numbers validate the harness; the modeled TPU columns
+report the roofline-bounded MXU throughput from the HardwareModel, including
+the paper-table comparison (T4 measured peaks from Tab 4.3 in T4_PAPER)."""
+from __future__ import annotations
+
+from repro.core import probes
+from repro.core.autotune import choose_matmul_tiles
+from repro.core.hwmodel import T4_PAPER, TPU_V5E
+from repro.core.registry import register
+
+from ..schema import BenchRecord
+
+
+@register(
+    "gemm",
+    paper_ref="Fig 4.2 / Tab 4.3",
+    description="matmul throughput across dtypes",
+    quick={"sizes": (256, 512)},
+    full={"sizes": (256, 512, 1024, 2048)},
+)
+def bench_gemm(sizes=(256, 512)) -> list:
+    res = probes.probe_matmul_throughput(sizes=sizes, dtypes=("float32",))
+    recs = []
+    for key, g in zip(res.x, res.y):
+        n = int(key.split(":")[1])
+        recs.append(
+            BenchRecord(
+                name=f"gemm_host_{key}",
+                benchmark="gemm",
+                x=key,
+                value=g,
+                unit="GFLOP/s",
+                metrics={"us_per_call": 2 * n**3 / (g * 1e9) * 1e6},
+            )
+        )
+    for dt in ("bfloat16", "int8"):
+        peak = TPU_V5E.peak(dt)
+        eb = 2 if dt == "bfloat16" else 1
+        for n in (1024, 4096, 8192):
+            flops = 2 * n**3
+            t = max(flops / peak, 3 * n * n * eb / TPU_V5E.main_memory_Bps)
+            tile = choose_matmul_tiles(n, n, n, dt)
+            recs.append(
+                BenchRecord(
+                    name=f"gemm_tpu_model_{dt}_{n}",
+                    benchmark="gemm",
+                    x=f"{dt}:{n}",
+                    value=flops / t / 1e12,
+                    unit="TFLOP/s",
+                    measured=False,
+                    metrics={"us_per_call": t * 1e6},
+                    info=f"roofline-bounded MXU, tiles=({tile.bm},{tile.bk},{tile.bn})",
+                )
+            )
+    for dt, v in T4_PAPER.peak_flops.items():
+        recs.append(
+            BenchRecord(
+                name=f"gemm_t4_paper_{dt}",
+                benchmark="gemm",
+                x=dt,
+                value=v / 1e12,
+                unit="TFLOP/s",
+                better="info",
+                measured=False,
+                info="paper Tab 4.3 measured T4 peak (cross-check anchor)",
+            )
+        )
+    return recs

@@ -1,0 +1,45 @@
+"""Tab 4.1 analogue — dependent-issue op latency table.
+
+The paper measures SASS instruction latencies with control-word stall
+tuning; the TPU/JAX analogue is a dependent-chain per-primitive latency
+(chain of fori_loop iterations, loop overhead subtracted)."""
+from __future__ import annotations
+
+from repro.core import probes
+from repro.core.registry import register
+
+from ..schema import BenchRecord
+
+
+@register(
+    "instr",
+    paper_ref="Tab 4.1",
+    description="dependent-issue op latency",
+    quick={"chain": 1024},
+    full={"chain": 8192},
+)
+def bench_instr(chain=1024) -> list:
+    res = probes.probe_op_latency(chain=chain)
+    recs = [
+        BenchRecord(
+            name=f"oplat_{name}",
+            benchmark="instr",
+            x=name,
+            value=lat,
+            unit="ns/op",
+            metrics={"us_per_call": lat * 1e-3},
+            info="dependent-issue",
+        )
+        for name, lat in zip(res.x, res.y)
+    ]
+    recs.append(
+        BenchRecord(
+            name="oplat_loop_overhead",
+            benchmark="instr",
+            x="baseline",
+            value=res.meta["base_ns"],
+            unit="ns/op",
+            info="fori_loop overhead baseline (subtracted from op rows)",
+        )
+    )
+    return recs

@@ -1,0 +1,65 @@
+"""Fig 3.5 / Tab 3.1 / Fig 3.6 analogue — memory-hierarchy dissection via
+fine-grained pointer chase.
+
+Measured on the live backend (recovers the HOST's L1/L2/L3/DRAM — the
+end-to-end validation of the Mei&Chu methodology), plus the modeled TPU v5e
+hierarchy (VMEM/HBM) from the HardwareModel.
+"""
+from __future__ import annotations
+
+from repro.core import probes
+from repro.core.hwmodel import TPU_V5E
+from repro.core.registry import register
+
+from ..schema import BenchRecord
+
+
+@register(
+    "memhier",
+    paper_ref="Fig 3.5 / Tab 3.1",
+    description="pointer-chase hierarchy dissection",
+    quick={"min_pow": 12, "max_pow": 25, "steps": 1 << 14},
+    full={"min_pow": 12, "max_pow": 28, "steps": 1 << 14},
+)
+def bench_memhier(min_pow=12, max_pow=25, steps=1 << 14) -> list:
+    sizes = [1 << p for p in range(min_pow, max_pow)]
+    res = probes.probe_pointer_chase(sizes, steps=steps)
+    plats, caps = probes.analyze_pointer_chase(res)
+    recs = [
+        BenchRecord(
+            name=f"pchase_host_{s >> 10}KiB",
+            benchmark="memhier",
+            x=s,
+            value=lat,
+            unit="ns/load",
+            metrics={"us_per_call": lat * 1e-3},
+        )
+        for s, lat in zip(res.x, res.y)
+    ]
+    for i, p in enumerate(plats):
+        recs.append(
+            BenchRecord(
+                name=f"pchase_host_level{i}",
+                benchmark="memhier",
+                x=i,
+                value=p.latency,
+                unit="ns",
+                better="info",  # plateau count/capacity varies across hosts
+                metrics={"capacity_bytes": int(p.end_size)},
+                info=f"capacity~{p.end_size >> 10}KiB latency {p.latency:.2f}ns",
+            )
+        )
+    for lvl in TPU_V5E.levels:
+        recs.append(
+            BenchRecord(
+                name=f"pchase_tpu_model_{lvl.name}",
+                benchmark="memhier",
+                x=lvl.name,
+                value=lvl.latency_ns,
+                unit="ns/load",
+                measured=False,
+                metrics={"size_bytes": lvl.size_bytes},
+                info=f"size {lvl.size_bytes >> 20}MiB lat {lvl.latency_ns:.0f}ns",
+            )
+        )
+    return recs

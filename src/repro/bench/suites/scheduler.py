@@ -1,0 +1,38 @@
+"""Tab 2.1 analogue — work-unit <-> execution-unit mapping.
+
+The paper shows warps colliding on a Turing scheduler (same index mod 4)
+halve throughput.  TPU grid cells execute sequentially on the core, so
+throughput/program must stay FLAT — this probe demonstrates that contrast
+(and catches any surprise serialization cliffs)."""
+from __future__ import annotations
+
+from repro.core import probes
+from repro.core.registry import register
+
+from ..schema import BenchRecord
+
+
+@register(
+    "scheduler",
+    paper_ref="Tab 2.1",
+    description="work-unit/execution-unit occupancy",
+    quick={"rows_per_program": 64, "programs": (1, 2, 3, 4, 6, 8)},
+    full={"rows_per_program": 256, "programs": (1, 2, 3, 4, 6, 8)},
+)
+def bench_scheduler(rows_per_program=64, programs=(1, 2, 3, 4, 6, 8)) -> list:
+    res = probes.probe_grid_occupancy(
+        rows_per_program=rows_per_program, programs=programs
+    )
+    base = res.y[0] or 1.0
+    return [
+        BenchRecord(
+            name=f"grid_occupancy_p{p}",
+            benchmark="scheduler",
+            x=p,
+            value=bw,
+            unit="GB/s",
+            metrics={"ratio_vs_1program": bw / base},
+            info=f"{bw / base:.2f}x of 1-program",
+        )
+        for p, bw in zip(res.x, res.y)
+    ]

@@ -6,7 +6,7 @@ is a ``ShapeConfig``.  ``(arch, shape)`` pairs form the dry-run/roofline cells.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 

@@ -11,27 +11,33 @@ HardwareModel (TPU v5e) — the numbers EXPERIMENTS.md reports for the target.
 from __future__ import annotations
 
 import json
-from dataclasses import asdict, dataclass
+from dataclasses import dataclass
 from pathlib import Path
 from typing import Optional
 
-import numpy as np
-
 from . import probes
-from .hwmodel import TPU_V5E, HardwareModel, MemoryLevel, fit_from_probes
+from .hwmodel import TPU_V5E, HardwareModel, fit_from_probes
+from .serialization import SCHEMA_VERSION, EnvFingerprint, probe_to_dict
 
 
 @dataclass
 class DissectReport:
     mode: str
     hardware: HardwareModel
-    probe_results: dict  # name -> ProbeResult-as-dict
+    probe_results: dict  # name -> ProbeResult-as-dict (bench.schema probe layout)
     detected_levels: list  # [(latency_ns, capacity_bytes|None)]
 
     def to_json(self) -> str:
+        """Serialize on the shared bench schema (version + env fingerprint),
+        so dissect reports and bench results are one JSON dialect."""
+        from dataclasses import asdict
+
         return json.dumps(
             {
+                "schema_version": SCHEMA_VERSION,
+                "kind": "dissect_report",
                 "mode": self.mode,
+                "env": asdict(EnvFingerprint.capture()),
                 "hardware": json.loads(self.hardware.to_json()),
                 "probes": self.probe_results,
                 "detected_levels": self.detected_levels,
@@ -74,8 +80,7 @@ def dissect_measure(
         mode="measure",
         hardware=hw,
         probe_results={
-            r.name: {"x": r.x, "y": r.y, "unit": r.unit, "meta": r.meta}
-            for r in (res_pc, res_bw, res_mm, res_ops)
+            r.name: probe_to_dict(r) for r in (res_pc, res_bw, res_mm, res_ops)
         },
         detected_levels=detected,
     )

@@ -18,7 +18,7 @@ import numpy as np
 from repro.kernels import ops
 
 from . import pchase as pc
-from .timing import Timing, time_fn
+from .timing import time_fn
 
 
 @dataclass(frozen=True)

@@ -1,22 +1,95 @@
-"""Benchmark registry: benchmarks/run.py discovers paper-table benchmarks here."""
+"""Benchmark registry — paper-table benchmarks register here with metadata.
+
+``repro.bench`` re-exports :func:`register`; suites decorate a function that
+returns ``list[BenchRecord]`` and declare which paper table/figure it
+reproduces plus its quick/full sweep grids:
+
+    @register("axpy", paper_ref="Fig 1.1",
+              quick={"sizes": (1 << 18,)}, full={"sizes": (1 << 18, 1 << 22)})
+    def bench_axpy(sizes=(1 << 18,)) -> list[BenchRecord]: ...
+
+The runner looks benchmarks up here, picks the grid for the requested mode,
+and calls the function with those keyword arguments.
+"""
 from __future__ import annotations
 
-from typing import Callable
+from dataclasses import dataclass, field
+from typing import Callable, Optional
 
-_REGISTRY: dict[str, Callable] = {}
+
+@dataclass(frozen=True)
+class BenchSpec:
+    """A registered benchmark plus its per-mode sweep grids."""
+
+    name: str
+    fn: Callable
+    paper_ref: str = ""  # e.g. "Fig 1.1", "Tab 4.3"
+    description: str = ""
+    quick: dict = field(default_factory=dict)  # kwargs for quick mode
+    full: dict = field(default_factory=dict)  # kwargs for full mode
+    tags: tuple = ()
+
+    def params(self, mode: str = "quick") -> dict:
+        if mode not in ("quick", "full"):
+            raise ValueError(f"mode must be quick|full, got {mode!r}")
+        return dict(self.quick if mode == "quick" else self.full)
+
+    def run(self, mode: str = "quick", overrides: Optional[dict] = None) -> list:
+        kwargs = self.params(mode)
+        if overrides:
+            kwargs.update(overrides)
+        return self.fn(**kwargs)
 
 
-def register(name: str):
+_REGISTRY: dict[str, BenchSpec] = {}
+
+
+def register(
+    name: str,
+    *,
+    paper_ref: str = "",
+    description: str = "",
+    quick: Optional[dict] = None,
+    full: Optional[dict] = None,
+    tags: tuple = (),
+):
+    """Decorator: register ``fn`` as benchmark ``name`` with its metadata."""
+
     def deco(fn: Callable) -> Callable:
-        _REGISTRY[name] = fn
+        if name in _REGISTRY:
+            raise ValueError(f"benchmark {name!r} already registered")
+        doc_first = (fn.__doc__ or "").strip().splitlines()
+        _REGISTRY[name] = BenchSpec(
+            name=name,
+            fn=fn,
+            paper_ref=paper_ref,
+            description=description or (doc_first[0] if doc_first else ""),
+            quick=dict(quick or {}),
+            full=dict(full if full is not None else quick or {}),
+            tags=tuple(tags),
+        )
         return fn
 
     return deco
 
 
-def get(name: str) -> Callable:
-    return _REGISTRY[name]
+def get(name: str) -> BenchSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown benchmark {name!r}; registered: {', '.join(names()) or '(none)'}"
+        ) from None
 
 
 def names() -> list[str]:
     return sorted(_REGISTRY)
+
+
+def specs() -> list[BenchSpec]:
+    return [_REGISTRY[n] for n in names()]
+
+
+def unregister(name: str) -> None:
+    """Remove a registration (test helper)."""
+    _REGISTRY.pop(name, None)

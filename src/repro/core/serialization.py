@@ -1,0 +1,57 @@
+"""Shared serialization primitives for benchmark results and dissect reports.
+
+Lives in ``repro.core`` so that core modules (dissect) and the higher-level
+``repro.bench`` package can share one schema version, env fingerprint, and
+probe layout without an upward core -> bench dependency; ``repro.bench.schema``
+re-exports everything here.
+"""
+from __future__ import annotations
+
+import platform
+import sys
+from dataclasses import dataclass
+from typing import Optional
+
+SCHEMA_VERSION = 1
+
+
+@dataclass(frozen=True)
+class EnvFingerprint:
+    """Where a result came from — stored with results AND baselines."""
+
+    jax_version: str
+    jaxlib_version: str
+    backend: str
+    device_kind: str
+    device_count: int
+    platform: str
+    python_version: str
+
+    @staticmethod
+    def capture() -> "EnvFingerprint":
+        import jax
+        import jaxlib
+
+        dev = jax.devices()[0]
+        return EnvFingerprint(
+            jax_version=jax.__version__,
+            jaxlib_version=jaxlib.__version__,
+            backend=jax.default_backend(),
+            device_kind=getattr(dev, "device_kind", str(dev)),
+            device_count=jax.device_count(),
+            platform=platform.platform(),
+            python_version=sys.version.split()[0],
+        )
+
+
+def probe_to_dict(res) -> dict:
+    """Serialize a core.probes.ProbeResult into the shared probe layout."""
+    return {"x": list(res.x), "y": list(res.y), "unit": res.unit, "meta": dict(res.meta)}
+
+
+def finite(v: float, fallback: Optional[float] = 0.0) -> float:
+    """JSON-safe float (strict JSON has no Infinity/NaN)."""
+    v = float(v)
+    if v != v or v in (float("inf"), float("-inf")):
+        return float(fallback)
+    return v

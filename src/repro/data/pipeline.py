@@ -13,7 +13,6 @@ import threading
 from typing import Callable, Optional
 
 import jax
-import numpy as np
 
 
 class DataPipeline:

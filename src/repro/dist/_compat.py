@@ -1,0 +1,21 @@
+"""JAX version compatibility for the distribution layer.
+
+The repo targets the modern ``jax.shard_map`` entry point (promoted out of
+``jax.experimental`` in newer releases).  On older installs it only exists at
+``jax.experimental.shard_map.shard_map`` with the same keyword signature, so
+we re-export it here and — mirroring the upstream promotion — install it onto
+the ``jax`` namespace when the installed version predates it.  Callers (and
+tests) can then use ``jax.shard_map`` uniformly.
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map
+
+    jax.shard_map = shard_map
+
+__all__ = ["shard_map"]

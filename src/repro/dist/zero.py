@@ -1,0 +1,28 @@
+"""ZeRO partitioning: spread replicated state over the data axis.
+
+``zero1_state_specs`` takes the tensor-parallel param specs and additionally
+shards, over ``data``, the first dim of each leaf that is still replicated
+and divides the data-axis size.  Used for optimizer state (stage 1), grad
+accumulators (stage 2), and fp32 master params / FSDP storage (stage 3) —
+the staging policy lives in launch.cell.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def zero1_state_specs(shapes, pspecs, mesh: Mesh):
+    if "data" not in mesh.shape or mesh.shape["data"] == 1:
+        return pspecs
+    dsize = mesh.shape["data"]
+
+    def one(leaf, sh: NamedSharding) -> NamedSharding:
+        spec = list(sh.spec) + [None] * (leaf.ndim - len(sh.spec))
+        for i, dim in enumerate(leaf.shape):
+            if spec[i] is None and dim >= dsize and dim % dsize == 0:
+                spec[i] = "data"
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, shapes, pspecs)

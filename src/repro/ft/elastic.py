@@ -11,7 +11,6 @@ property of the model, not the fleet).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Optional
 
 from repro.ckpt import CheckpointManager, load_resharded
 from repro.launch.mesh import make_mesh_for

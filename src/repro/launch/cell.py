@@ -8,7 +8,7 @@ configs).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -122,7 +122,9 @@ def cost_reference(cfg: ModelConfig, shape: ShapeConfig) -> dict:
         lowered = jax.jit(model.decode_step).lower(
             params_sh, specs["cache"], specs["tokens"], specs["pos"]
         )
-    ca = lowered.cost_analysis() or {}
+    from repro.perfmodel.costs import _as_cost_dict
+
+    ca = _as_cost_dict(lowered.cost_analysis())
     return {
         "global_flops": float(ca.get("flops", 0.0)),
         "global_bytes_prefusion": float(ca.get("bytes accessed", 0.0)),

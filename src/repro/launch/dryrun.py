@@ -20,7 +20,6 @@ import time  # noqa: E402
 import traceback  # noqa: E402
 from pathlib import Path  # noqa: E402
 
-import jax  # noqa: E402
 
 from repro.configs import CONFIGS, SHAPES, get_config, get_shape  # noqa: E402
 from repro.launch.cell import Cell, analytic_memory, build_cell, cost_reference  # noqa: E402

@@ -167,8 +167,6 @@ def collective_bytes(hlo_text: str, default_group: int = 1) -> CollectiveStats:
     if not comps:
         return stats
 
-    from functools import lru_cache
-
     def walk(name: str, seen: frozenset) -> tuple[float, float, dict, dict]:
         if name not in comps or name in seen:
             return 0.0, 0.0, {}, {}

@@ -8,7 +8,7 @@ and verify bit-exact resume.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 import jax

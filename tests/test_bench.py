@@ -1,0 +1,208 @@
+"""repro.bench subsystem: registry, schema round-trip, baseline gating."""
+import json
+
+import pytest
+
+from repro.bench import (
+    BenchRecord,
+    BenchResult,
+    EnvFingerprint,
+    SchemaError,
+    compare,
+    load_baselines,
+    validate_result,
+    write_baselines,
+)
+from repro.bench.schema import SCHEMA_VERSION, better_for_unit, finite
+from repro.core import registry
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def test_register_lookup_and_grids():
+    @registry.register(
+        "_tmp_bench",
+        paper_ref="Tab 9.9",
+        quick={"n": 2},
+        full={"n": 16},
+        tags=("test",),
+    )
+    def _bench(n=2):
+        """one-line description."""
+        return [
+            BenchRecord(name=f"tmp_{i}", benchmark="_tmp_bench", x=i, value=1.0, unit="us")
+            for i in range(n)
+        ]
+
+    try:
+        spec = registry.get("_tmp_bench")
+        assert spec.paper_ref == "Tab 9.9"
+        assert spec.description == "one-line description."
+        assert spec.params("quick") == {"n": 2} and spec.params("full") == {"n": 16}
+        assert "_tmp_bench" in registry.names()
+        assert len(spec.run("quick")) == 2
+        assert len(spec.run("full")) == 16
+        assert len(spec.run("quick", overrides={"n": 3})) == 3
+        with pytest.raises(ValueError):
+            registry.register("_tmp_bench")(lambda: [])
+        with pytest.raises(ValueError):
+            spec.params("smoke")
+    finally:
+        registry.unregister("_tmp_bench")
+    with pytest.raises(KeyError):
+        registry.get("_tmp_bench")
+
+
+# ---------------------------------------------------------------------------
+# schema
+# ---------------------------------------------------------------------------
+def _mk_result(records) -> BenchResult:
+    return BenchResult(mode="quick", env=EnvFingerprint.capture(), records=records)
+
+
+def test_better_inference_and_finite():
+    assert better_for_unit("ns/op") == "lower"
+    assert better_for_unit("GB/s") == "higher"
+    assert better_for_unit("levels") == "info"
+    assert BenchRecord(name="a", benchmark="b", x=0, value=1.0, unit="us").better == "lower"
+    assert finite(float("inf"), 7.0) == 7.0
+    assert finite(float("nan")) == 0.0
+    assert finite(3.5) == 3.5
+
+
+def test_schema_roundtrip(tmp_path):
+    recs = [
+        BenchRecord(
+            name="r1", benchmark="b", x=128, value=2.5, unit="GB/s",
+            metrics={"us_per_call": 4.0}, info="hello",
+        ),
+        BenchRecord(
+            name="r2", benchmark="b", x="f32", value=9.0, unit="ns/op", measured=False,
+        ),
+    ]
+    res = _mk_result(recs)
+    p = tmp_path / "r.json"
+    res.save(p)
+    back = BenchResult.load(p)
+    assert back.schema_version == SCHEMA_VERSION
+    assert back.records == recs
+    assert back.env == res.env
+    assert back.benchmarks() == ["b"]
+
+
+def test_schema_validation_rejects_bad_docs():
+    good = _mk_result(
+        [BenchRecord(name="r1", benchmark="b", x=0, value=1.0, unit="us")]
+    ).to_dict()
+    validate_result(good)
+
+    d = dict(good)
+    d.pop("env")
+    with pytest.raises(SchemaError, match="missing result keys"):
+        validate_result(d)
+
+    d = json.loads(json.dumps(good))
+    d["schema_version"] = 999
+    with pytest.raises(SchemaError, match="schema_version"):
+        validate_result(d)
+
+    d = json.loads(json.dumps(good))
+    d["records"].append(dict(d["records"][0]))
+    with pytest.raises(SchemaError, match="duplicate record name"):
+        validate_result(d)
+
+    d = json.loads(json.dumps(good))
+    d["records"][0]["value"] = "fast"
+    with pytest.raises(SchemaError, match="numeric"):
+        validate_result(d)
+
+
+# ---------------------------------------------------------------------------
+# baseline gating
+# ---------------------------------------------------------------------------
+def _gate_fixture(tmp_path, lat=100.0, bw=50.0):
+    base = _mk_result(
+        [
+            BenchRecord(name="lat", benchmark="bb", x=0, value=lat, unit="ns/op"),
+            BenchRecord(name="bw", benchmark="bb", x=0, value=bw, unit="GB/s"),
+            BenchRecord(
+                name="model", benchmark="bb", x=0, value=10.0, unit="MHz", measured=False
+            ),
+            BenchRecord(
+                name="note", benchmark="bb", x=0, value=1.0, unit="levels"
+            ),  # info: never gated
+        ]
+    )
+    write_baselines(base, tmp_path)
+    return load_baselines(tmp_path)
+
+
+def test_baseline_gate_trips_on_2x_slowdown(tmp_path):
+    table = _gate_fixture(tmp_path)
+    slow = _mk_result(
+        [
+            BenchRecord(name="lat", benchmark="bb", x=0, value=200.0, unit="ns/op"),
+            BenchRecord(name="bw", benchmark="bb", x=0, value=25.0, unit="GB/s"),
+            BenchRecord(
+                name="model", benchmark="bb", x=0, value=10.0, unit="MHz", measured=False
+            ),
+        ]
+    )
+    report = compare(slow, table)
+    assert not report.passed
+    assert sorted(d.name for d in report.regressions) == ["bw", "lat"]
+    # a 2x slowdown reads as +100% in BOTH unit directions
+    assert all(abs(d.regression - 1.0) < 1e-9 for d in report.regressions)
+
+
+def test_baseline_gate_passes_within_noise(tmp_path):
+    table = _gate_fixture(tmp_path)
+    noisy = _mk_result(
+        [
+            BenchRecord(name="lat", benchmark="bb", x=0, value=130.0, unit="ns/op"),
+            BenchRecord(name="bw", benchmark="bb", x=0, value=40.0, unit="GB/s"),
+            BenchRecord(
+                name="model", benchmark="bb", x=0, value=10.1, unit="MHz", measured=False
+            ),
+            BenchRecord(name="note", benchmark="bb", x=0, value=5.0, unit="levels"),
+        ]
+    )
+    report = compare(noisy, table)
+    assert report.passed, report.format()
+    assert report.within == 3  # info row not gated
+
+
+def test_modeled_records_get_tight_threshold(tmp_path):
+    table = _gate_fixture(tmp_path)
+    drifted = _mk_result(
+        [
+            BenchRecord(
+                name="model", benchmark="bb", x=0, value=9.5, unit="MHz", measured=False
+            )
+        ]
+    )
+    report = compare(drifted, table)
+    assert [d.name for d in report.regressions] == ["model"]  # ~5% > 2% tight gate
+    assert report.missing_records == ["bw", "lat"]
+
+
+def test_new_records_and_run_errors_reported(tmp_path):
+    table = _gate_fixture(tmp_path)
+    res = _mk_result(
+        [BenchRecord(name="brand_new", benchmark="bb", x=0, value=1.0, unit="us")]
+    )
+    res.errors["bb"] = "RuntimeError: boom"
+    report = compare(res, table)
+    assert report.new_records == ["brand_new"]
+    assert not report.passed  # run errors fail the gate
+    assert "bb" in report.errors
+
+
+def test_threshold_scale_loosens_gate(tmp_path):
+    table = _gate_fixture(tmp_path)
+    slow = _mk_result(
+        [BenchRecord(name="lat", benchmark="bb", x=0, value=200.0, unit="ns/op")]
+    )
+    assert not compare(slow, table).passed
+    assert compare(slow, table, threshold_scale=2.0).passed

@@ -1,0 +1,96 @@
+"""Every registered benchmark runs in quick mode through the registry path.
+
+One shared runner invocation (sweeps trimmed via the spec override hook so
+the tier-1 suite stays fast); per-benchmark assertions validate that each
+suite produced schema-valid, finite records under its own name.
+"""
+import math
+
+import pytest
+
+from repro.bench import runner, validate_result
+from repro.core import registry
+
+# trimmed sweep overrides for the heavy host-measured suites; semantics and
+# code paths are identical to the full quick grids
+_SMOKE_OVERRIDES = {
+    "axpy": {"sizes": (1 << 16,), "widths": (128, 256)},
+    "memhier": {"min_pow": 12, "max_pow": 17, "steps": 1 << 12},
+    "bandwidth": {"min_pow": 18, "max_pow": 20, "block_footprint": 1 << 20},
+    "instr": {"chain": 256},
+    "atomics": {"n_updates": 1 << 12, "collisions": (1, 4)},
+    "gemm": {"sizes": (128,)},
+    "scheduler": {"rows_per_program": 16, "programs": (1, 2)},
+}
+
+
+@pytest.fixture(scope="module")
+def quick_records():
+    runner.load_suites()
+    out = {}
+    for name in registry.names():
+        if name == "dissect":
+            continue  # dissect re-runs the probe suites; covered in test_core_engine
+        out[name] = registry.get(name).run("quick", overrides=_SMOKE_OVERRIDES.get(name))
+    return out
+
+
+def test_all_paper_benchmarks_registered():
+    runner.load_suites()
+    assert set(registry.names()) >= {
+        "axpy", "scheduler", "memhier", "bandwidth", "instr",
+        "atomics", "gemm", "throttle", "dissect",
+    }
+    for spec in registry.specs():
+        assert spec.paper_ref, f"{spec.name} missing paper_ref"
+        assert spec.params("quick") is not None
+
+
+def test_runner_select_filters_by_prefix():
+    assert runner.select(["gem"]) == ["gemm"]
+    assert runner.select() == registry.names()
+
+
+@pytest.mark.parametrize(
+    "name",
+    ["atomics", "axpy", "bandwidth", "gemm", "instr", "memhier", "scheduler", "throttle"],
+)
+def test_quick_mode_produces_valid_records(quick_records, name):
+    recs = quick_records[name]
+    assert recs, f"{name}: no records"
+    for r in recs:
+        assert r.benchmark == name
+        assert math.isfinite(r.value), f"{r.name}: non-finite value"
+        for k, v in r.metrics.items():
+            assert isinstance(v, (int, float)), f"{r.name}.metrics[{k}]"
+    assert len({r.name for r in recs}) == len(recs), f"{name}: duplicate record names"
+
+
+def test_combined_result_is_schema_valid(quick_records):
+    from repro.bench import BenchResult, EnvFingerprint
+
+    records = [r for recs in quick_records.values() for r in recs]
+    res = BenchResult(mode="quick", env=EnvFingerprint.capture(), records=records)
+    validate_result(res.to_dict())
+    back = BenchResult.from_json(res.to_json())
+    assert back.records == records
+
+
+def test_checked_in_baselines_load_and_cover_suites():
+    from pathlib import Path
+
+    from repro.bench import load_baselines
+
+    d = Path(__file__).resolve().parent.parent / "benchmarks" / "baselines"
+    table = load_baselines(d)
+    assert table, "no baselines checked in"
+    covered = {bench for bench, _ in table.values()}
+    assert covered >= {"axpy", "bandwidth", "gemm", "instr", "memhier", "throttle"}
+
+
+def test_legacy_csv_shim_roundtrip():
+    from benchmarks import bench_throttle
+
+    rows = bench_throttle.run(quick=True)
+    assert rows and set(rows[0]) == {"name", "us_per_call", "derived"}
+    assert any("MHz" in r["derived"] for r in rows)

@@ -1,7 +1,4 @@
 """Checkpointing, fault tolerance, straggler detection, end-to-end resume."""
-import json
-import shutil
-
 import jax
 import jax.numpy as jnp
 import numpy as np

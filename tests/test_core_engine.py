@@ -1,7 +1,6 @@
 """Core microbenchmark engine: hwmodel, dissect, autotune, throttle-vs-paper."""
 import json
 
-import numpy as np
 import pytest
 
 from repro.core import TPU_V5E, T4_PAPER, HardwareModel

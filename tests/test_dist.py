@@ -1,8 +1,5 @@
 """Distribution layer tests (multi fake devices via subprocess — conftest
 deliberately leaves the main pytest process at 1 device)."""
-import numpy as np
-import pytest
-
 from utils import run_with_devices
 
 

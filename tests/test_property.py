@@ -2,10 +2,13 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.pchase import detect_plateaus, single_cycle_permutation
-from repro.core.throttle import T4_THROTTLE, ThrottleParams, simulate, steady_state_clock
+from repro.core.throttle import T4_THROTTLE, simulate, steady_state_clock
 from repro.kernels import ops, ref
 
 FAST = settings(max_examples=20, deadline=None)

@@ -3,7 +3,6 @@ completes batched requests with continuous batching; probes run for real."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.data import DataPipeline, SyntheticLM

@@ -30,6 +30,7 @@ def _cmd_list(args) -> int:
                 [
                     {
                         "name": s.name,
+                        "backend": s.backend,
                         "paper_ref": s.paper_ref,
                         "description": s.description,
                         "quick": s.quick,
@@ -43,22 +44,25 @@ def _cmd_list(args) -> int:
         )
         return 0
     w = max((len(s.name) for s in specs), default=4)
+    bw = max((len(s.backend) for s in specs), default=0)
     for s in specs:
-        print(f"{s.name:<{w}}  {s.paper_ref:<24}  {s.description}")
+        tag = f"{s.backend:<{bw}}  " if bw else ""
+        print(f"{s.name:<{w}}  {tag}{s.paper_ref:<24}  {s.description}")
     return 0
 
 
 def _cmd_run(args) -> int:
-    mode = "full" if args.full else "quick"
-    if args.only and not runner.select(args.only):
+    mode = args.mode or ("full" if args.full else "quick")
+    only = list(args.benchmarks or []) + list(args.only or [])
+    if only and not runner.select(only):
         print(
-            f"error: --only {' '.join(args.only)} matches no registered benchmark "
+            f"error: {' '.join(only)} matches no registered benchmark "
             f"(have: {', '.join(runner.select())})",
             file=sys.stderr,
         )
         return 2
     result = runner.run_benchmarks(
-        only=args.only or None, mode=mode, out_path=args.out, verbose=args.verbose
+        only=only or None, mode=mode, out_path=args.out, verbose=args.verbose
     )
     if args.csv:
         print("name,value,unit,derived")
@@ -106,10 +110,15 @@ def main(argv=None) -> int:
     p.set_defaults(fn=_cmd_list)
 
     p = sub.add_parser("run", help="execute benchmarks, emit JSON results")
+    p.add_argument(
+        "benchmarks", nargs="*",
+        help="benchmark name prefixes to run (prefixes sweep up [backend] variants)",
+    )
     g = p.add_mutually_exclusive_group()
     g.add_argument("--quick", action="store_true", help="quick grids (default)")
     g.add_argument("--full", action="store_true", help="full paper-scale grids")
-    p.add_argument("--only", nargs="*", help="benchmark name prefixes to run")
+    g.add_argument("--mode", choices=("quick", "full"), help="alias for --quick/--full")
+    p.add_argument("--only", nargs="*", help="benchmark name prefixes to run (legacy alias)")
     p.add_argument("--out", help="write JSON results to this path")
     p.add_argument("--csv", action="store_true", help="print legacy CSV to stdout")
     p.add_argument("-v", "--verbose", action="store_true")

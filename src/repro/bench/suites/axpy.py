@@ -14,7 +14,7 @@ import jax.numpy as jnp
 from repro.core.hwmodel import TPU_V5E
 from repro.core.registry import register
 from repro.core.timing import time_fn
-from repro.kernels import ops
+from repro.kernels import api
 
 from ..schema import BenchRecord
 
@@ -50,7 +50,8 @@ def bench_axpy(sizes=(1 << 18, 1 << 20), widths=(128, 256, 512, 1024)) -> list:
             xv = jnp.ones((n // w, w), jnp.float32)
             yv = jnp.ones((n // w, w), jnp.float32)
             t = time_fn(
-                ops.axpy, xv, yv, 2.5, block_rows=8, block_cols=w, warmup=2, reps=5
+                api.axpy.bound(xv, yv, 2.5, block_rows=8, block_cols=w),
+                xv, yv, 2.5, warmup=2, reps=5,
             )
             recs.append(
                 BenchRecord(
@@ -73,6 +74,41 @@ def bench_axpy(sizes=(1 << 18, 1 << 20), widths=(128, 256, 512, 1024)) -> list:
                 measured=False,
                 metrics={"us_per_call": bytes_moved / TPU_V5E.main_memory_Bps * 1e6},
                 info="HBM-bandwidth-bound TPU v5e model",
+            )
+        )
+    return recs
+
+
+@register(
+    "axpy",
+    backends=("pallas", "xla"),
+    paper_ref="Fig 1.1",
+    description="access-width axpy sweep through the kernel dispatch API",
+    quick={"size": 1 << 18, "widths": (256, 512)},
+    full={"size": 1 << 20, "widths": (128, 256, 512, 1024)},
+)
+def bench_axpy_backend(size=1 << 20, widths=(256, 512), backend="xla") -> list:
+    """Same measurement, one registered variant per kernel backend: the Pallas
+    rows vary with tile width, the XLA rows are the width-insensitive library
+    baseline — the paper's Fig 1.1 comparison as a results-file diff."""
+    recs = []
+    bytes_moved = 3 * size * 4
+    for w in widths:
+        x = jnp.ones((size // w, w), jnp.float32)
+        y = jnp.ones((size // w, w), jnp.float32)
+        t = time_fn(
+            api.axpy.bound(x, y, 2.5, block_rows=8, block_cols=w, backend=backend),
+            x, y, 2.5, warmup=2, reps=5,
+        )
+        recs.append(
+            BenchRecord(
+                name=f"axpy_dispatch_n{size}_w{w}",
+                benchmark="axpy",
+                x=w,
+                value=bytes_moved / t.min_s / 1e9,
+                unit="GB/s",
+                metrics={"us_per_call": t.min_s * 1e6, "size": size},
+                info=f"{backend} backend, tile width {w}",
             )
         )
     return recs

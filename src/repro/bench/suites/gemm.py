@@ -69,3 +69,39 @@ def bench_gemm(sizes=(256, 512)) -> list:
             )
         )
     return recs
+
+
+@register(
+    "gemm",
+    backends=("pallas", "xla"),
+    paper_ref="Fig 4.2 / Tab 4.3",
+    description="matmul throughput through the kernel dispatch API",
+    quick={"sizes": (256, 512)},
+    full={"sizes": (256, 512, 1024)},
+)
+def bench_gemm_backend(sizes=(256, 512), backend="xla") -> list:
+    """The same GEMM measurement registered once per kernel backend —
+    ``gemm[pallas]`` vs ``gemm[xla]`` is the paper's Tensor-Core-vs-CUDA-core
+    side-by-side, restated as Pallas-kernel vs XLA-library on one results
+    file.  Tiles come from ``core.autotune`` via the policy."""
+    from repro.kernels.api import kernel_policy
+
+    with kernel_policy(autotune=True):
+        res = probes.probe_matmul_throughput(
+            sizes=sizes, dtypes=("float32",), backend=backend
+        )
+    recs = []
+    for key, g in zip(res.x, res.y):
+        n = int(key.split(":")[1])
+        recs.append(
+            BenchRecord(
+                name=f"gemm_dispatch_{key}",
+                benchmark="gemm",
+                x=key,
+                value=g,
+                unit="GFLOP/s",
+                metrics={"us_per_call": 2 * n**3 / (g * 1e9) * 1e6},
+                info=f"{backend} backend",
+            )
+        )
+    return recs

@@ -85,6 +85,9 @@ class ModelConfig:
     param_dtype: str = "float32"
     attn_chunk: int = 1024  # blockwise-attention KV chunk
     attn_impl: str = "blockwise"  # blockwise | naive | pallas
+    # xla (chunked-scan in jnp) | pallas (kernels.api ssm_scan; stateful
+    # calls — decode prefill with h0 / return_state — stay on the jnp scan)
+    ssm_impl: str = "xla"
     remat: bool = True  # checkpoint each layer block in training
     remat_policy: str = "full"  # full (recompute all) | dots (save matmul outputs)
     zero_stage: int = 3  # 0: none, 1: opt state, 2: +grads, 3: +fp32 params (FSDP)

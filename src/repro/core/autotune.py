@@ -24,7 +24,18 @@ class TileChoice:
 
 
 def _dtype_bytes(dtype: str) -> int:
-    return {"bfloat16": 2, "float32": 4, "int8": 1}[dtype]
+    sizes = {"bfloat16": 2, "float16": 2, "float32": 4, "int8": 1}
+    try:
+        return sizes[dtype]
+    except KeyError:
+        raise KeyError(
+            f"no byte-size entry for dtype {dtype!r}; known: {sorted(sizes)}"
+        ) from None
+
+
+def dtype_name(dtype) -> str:
+    """Normalize a jnp/numpy dtype (or string) to the names the models use."""
+    return str(getattr(dtype, "name", dtype))
 
 
 def matmul_time_model(
@@ -103,6 +114,31 @@ def choose_attention_chunk(
         # per-core working set: q block (128, hd), kv chunk (c, hd) x2, acc
         ws = (128 * head_dim + 2 * c * head_dim) * eb + 128 * head_dim * 4
         ws *= n_heads_local
+        if ws <= budget:
+            best = c
+    return best
+
+
+def choose_ssm_chunk(
+    seq_len: int,
+    head_dim: int,
+    state_dim: int,
+    dtype: str = "float32",
+    hw: HardwareModel = TPU_V5E,
+    candidates: Sequence[int] = (64, 128, 256, 512),
+    vmem_budget_frac: float = 0.6,
+) -> int:
+    """Chunk length for the chunked-SSD scan: biggest chunk whose per-step
+    working set (u/y tiles, B/C chunks, and the (chunk, chunk) intra-chunk
+    decay matrix) fits the VMEM budget — same width-vs-capacity trade as
+    :func:`choose_attention_chunk`, with the quadratic score tile dominating."""
+    eb = _dtype_bytes(dtype)
+    budget = hw.staging_bytes * vmem_budget_frac
+    best = candidates[0]
+    for c in candidates:
+        if c > seq_len:
+            break
+        ws = c * (2 * head_dim + 2 * state_dim) * eb + c * c * 4  # + fp32 decay tile
         if ws <= budget:
             best = c
     return best

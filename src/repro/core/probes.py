@@ -5,17 +5,24 @@ Measure mode runs for real on the current backend (CPU here: the probes then
 characterize the *host's* memory hierarchy — the end-to-end validation of the
 methodology).  Model mode predicts TPU v5e numbers from the HardwareModel
 (reported in EXPERIMENTS.md; on a real TPU the same probes run natively).
+
+Probes that exercise a kernel take a ``backend`` argument routed through
+:mod:`repro.kernels.api` ("pallas" | "interpret" | "xla"), so one probe
+definition measures every hardware path side by side — the paper's
+same-op-different-path recipe.  The old ``use_pallas`` booleans remain as
+deprecated aliases.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
-from typing import Callable, Sequence
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ops
+from repro.kernels import api
 
 from . import pchase as pc
 from .timing import time_fn
@@ -30,6 +37,27 @@ class ProbeResult:
     meta: dict
 
 
+_UNSET = object()  # sentinel: distinguishes an explicit use_pallas=False
+
+
+def _pick_backend(backend: Optional[str], use_pallas=_UNSET, default: str = "xla") -> str:
+    """Resolve the probe's kernel path: explicit ``backend`` kwarg > the
+    deprecated ``use_pallas`` boolean (True -> "pallas", which
+    auto-interprets off-TPU) > an ambient ``kernel_policy`` backend > the
+    probe's own ``default``."""
+    if use_pallas is not _UNSET:
+        warnings.warn(
+            "use_pallas= is deprecated; pass backend='pallas'|'interpret'|'xla'",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+        if backend is None:
+            return "pallas" if use_pallas else "xla"
+    if backend is not None:
+        return backend
+    return api.current_policy().backend or default
+
+
 # ---------------------------------------------------------------------------
 # §3.1/3.2/3.8: pointer-chase latency vs. working set
 # ---------------------------------------------------------------------------
@@ -37,35 +65,27 @@ def probe_pointer_chase(
     sizes_bytes: Sequence[int] = (),
     steps: int = 1 << 16,
     seed: int = 0,
-    use_pallas: bool = False,
+    backend: Optional[str] = None,
+    use_pallas=_UNSET,
 ) -> ProbeResult:
     """Dependent-load latency (ns/load) vs. footprint.
 
-    Default path times a jitted fori_loop walk (minimal dispatch overhead);
-    ``use_pallas`` times the Pallas kernel instead (identical semantics).
+    The ``xla`` backend times a jitted fori_loop walk (minimal dispatch
+    overhead); the Pallas backends time the kernel (identical semantics).
     """
+    be = _pick_backend(backend, use_pallas)
     if not sizes_bytes:
         sizes_bytes = [1 << p for p in range(12, 27)]  # 4 KiB .. 64 MiB
     lats = []
     for sz in sizes_bytes:
         n = max(sz // 4, 8)
         perm = jnp.asarray(pc.single_cycle_permutation(n, seed))
-        if use_pallas:
-            fn = lambda p: ops.pchase(p, steps)
-        else:
-
-            @jax.jit
-            def fn(p):
-                def body(_, idx):
-                    return p[idx]
-
-                return jax.lax.fori_loop(0, steps, body, jnp.int32(0))
-
-        t = time_fn(fn, perm, warmup=2, reps=5)
+        fn = api.pchase.bound(perm, steps, backend=be)
+        t = time_fn(fn, perm, steps, warmup=2, reps=5)
         lats.append(t.min_s / steps * 1e9)
     return ProbeResult(
         "pointer_chase", tuple(int(s) for s in sizes_bytes), tuple(lats), "ns/load",
-        {"steps": steps, "pallas": use_pallas},
+        {"steps": steps, "backend": be},
     )
 
 
@@ -81,8 +101,10 @@ def analyze_pointer_chase(res: ProbeResult, rel_jump: float = 0.35):
 def probe_stream_bandwidth(
     footprints: Sequence[int] = (),
     block_cols: int = 512,
-    use_pallas: bool = False,  # interpret-mode grids are Python loops: XLA path for wall-clock
+    backend: Optional[str] = None,
+    use_pallas=_UNSET,  # interpret-mode grids are Python loops: XLA path for wall-clock
 ) -> ProbeResult:
+    be = _pick_backend(backend, use_pallas)
     if not footprints:
         footprints = [1 << p for p in range(16, 28)]  # 64 KiB .. 256 MiB
     bws = []
@@ -91,34 +113,34 @@ def probe_stream_bandwidth(
         rows = max(sz // (4 * cols), 8)
         rows -= rows % 8
         x = jnp.ones((rows, cols), jnp.float32)
-        if use_pallas:
-            fn = lambda a: ops.stream_reduce(a, block_rows=8, block_cols=cols)
-        else:
-            fn = jax.jit(lambda a: jnp.sum(a, dtype=jnp.float32))
+        fn = api.stream_reduce.bound(x, block_rows=8, block_cols=cols, backend=be)
         t = time_fn(fn, x, warmup=2, reps=5)
         bws.append(x.size * 4 / t.min_s / 1e9)
     return ProbeResult(
         "stream_bandwidth", tuple(int(f) for f in footprints), tuple(bws), "GB/s",
-        {"block_cols": block_cols, "pallas": use_pallas},
+        {"block_cols": block_cols, "backend": be},
     )
 
 
 def probe_block_shape_bandwidth(
-    footprint: int = 1 << 20, col_widths: Sequence[int] = (128, 256, 512, 1024, 2048)
+    footprint: int = 1 << 20,
+    col_widths: Sequence[int] = (128, 256, 512, 1024, 2048),
+    backend: Optional[str] = None,
 ) -> ProbeResult:
     """The Ch.1 axpy experiment: bandwidth vs. access width (VMEM tile cols)."""
+    be = _pick_backend(backend, default="pallas")
     bws = []
     for cols in col_widths:
         rows = max(footprint // (4 * cols), 8)
         rows -= rows % 8
         x = jnp.ones((rows, cols), jnp.float32)
         y = jnp.ones((rows, cols), jnp.float32)
-        fn = lambda a, b: ops.axpy(a, b, 2.0, block_rows=8, block_cols=cols)
-        t = time_fn(fn, x, y, warmup=2, reps=5)
+        fn = api.axpy.bound(x, y, 2.0, block_rows=8, block_cols=cols, backend=be)
+        t = time_fn(fn, x, y, 2.0, warmup=2, reps=5)
         bws.append(3 * x.size * 4 / t.min_s / 1e9)  # 2 reads + 1 write
     return ProbeResult(
         "block_shape_bandwidth", tuple(int(c) for c in col_widths), tuple(bws), "GB/s",
-        {"footprint": footprint},
+        {"footprint": footprint, "backend": be},
     )
 
 
@@ -202,46 +224,57 @@ def probe_scatter_contention(
 def probe_matmul_throughput(
     sizes: Sequence[int] = (256, 512, 1024, 2048),
     dtypes: Sequence[str] = ("float32",),
-    use_pallas: bool = False,
+    backend: Optional[str] = None,
+    use_pallas=_UNSET,
 ) -> ProbeResult:
+    be = _pick_backend(backend, use_pallas)
     recs, keys = [], []
+    int8_rows = []
     for dt in dtypes:
         jdt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "int8": jnp.int8}[dt]
         for n in sizes:
+            a = jnp.ones((n, n), jdt)
+            b = jnp.ones((n, n), jdt)
             if jdt == jnp.int8:
-                a = jnp.ones((n, n), jdt)
-                b = jnp.ones((n, n), jdt)
+                # int8 has no Pallas/oracle path (int32-accumulating
+                # dot_general only); always XLA — tagged so a backend
+                # comparison can't mistake these rows for the kernel path
                 fn = jax.jit(lambda a, b: jax.lax.dot_general(
                     a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32))
+                int8_rows.append(f"{dt}:{n}")
             else:
-                a = jnp.ones((n, n), jdt)
-                b = jnp.ones((n, n), jdt)
-                if use_pallas:
-                    fn = lambda a, b: ops.matmul(a, b, bm=min(128, n), bk=min(128, n), bn=min(128, n))
-                else:
-                    fn = jax.jit(lambda a, b: a @ b)
+                # tiles default to the clamped 128 MXU alignment; a
+                # kernel_policy(autotune=True) in scope overrides them
+                fn = api.matmul.bound(a, b, backend=be)
             t = time_fn(fn, a, b, warmup=2, reps=5)
             keys.append(f"{dt}:{n}")
             recs.append(2 * n**3 / t.min_s / 1e9)
-    return ProbeResult("matmul_throughput", tuple(keys), tuple(recs), "GFLOP/s", {})
+    meta = {"backend": be}
+    if int8_rows:
+        meta["xla_only_rows"] = tuple(int8_rows)
+    return ProbeResult("matmul_throughput", tuple(keys), tuple(recs), "GFLOP/s", meta)
 
 
 # ---------------------------------------------------------------------------
 # Tab 2.1 analogue: grid occupancy (programs vs. core count)
 # ---------------------------------------------------------------------------
 def probe_grid_occupancy(
-    rows_per_program: int = 256, programs: Sequence[int] = (1, 2, 3, 4, 6, 8)
+    rows_per_program: int = 256,
+    programs: Sequence[int] = (1, 2, 3, 4, 6, 8),
+    backend: Optional[str] = None,
 ) -> ProbeResult:
     """Throughput vs. grid size.  On TPU, grid cells execute sequentially per
     core; throughput/program is flat (unlike the Turing scheduler-collision
     table) — the probe demonstrates/verifies that contrast."""
+    be = _pick_backend(backend, default="pallas")
     rates = []
     for g in programs:
         x = jnp.ones((g * rows_per_program, 512), jnp.float32)
-        fn = lambda a: ops.stream_reduce(a, block_rows=rows_per_program, block_cols=512)
+        fn = api.stream_reduce.bound(x, block_rows=rows_per_program, block_cols=512,
+                                     backend=be)
         t = time_fn(fn, x, warmup=2, reps=5)
         rates.append(x.size * 4 / t.min_s / 1e9)
     return ProbeResult(
         "grid_occupancy", tuple(int(p) for p in programs), tuple(rates), "GB/s",
-        {"rows_per_program": rows_per_program},
+        {"rows_per_program": rows_per_program, "backend": be},
     )

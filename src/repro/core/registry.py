@@ -10,10 +10,19 @@ reproduces plus its quick/full sweep grids:
 
 The runner looks benchmarks up here, picks the grid for the requested mode,
 and calls the function with those keyword arguments.
+
+Passing ``backends=("pallas", "xla")`` registers one *variant* per backend
+(named ``name[backend]``, the paper's side-by-side comparison axis) instead
+of the bare name.  Each variant runs its function under
+``kernel_policy(backend=...)`` from :mod:`repro.kernels.api`, passes
+``backend=`` through when the function accepts it, and tags the emitted
+record names with ``[backend]`` so a single results document holds every
+hardware path of the same measurement.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import inspect
+from dataclasses import dataclass, field, replace
 from typing import Callable, Optional
 
 
@@ -28,6 +37,7 @@ class BenchSpec:
     quick: dict = field(default_factory=dict)  # kwargs for quick mode
     full: dict = field(default_factory=dict)  # kwargs for full mode
     tags: tuple = ()
+    backend: str = ""  # kernel backend for a parameterized variant
 
     def params(self, mode: str = "quick") -> dict:
         if mode not in ("quick", "full"):
@@ -38,7 +48,25 @@ class BenchSpec:
         kwargs = self.params(mode)
         if overrides:
             kwargs.update(overrides)
-        return self.fn(**kwargs)
+        if not self.backend:
+            return self.fn(**kwargs)
+        # backend variant: scope the kernel policy, thread the backend kwarg
+        # through when accepted, and tag records with the variant identity.
+        from repro.kernels.api import kernel_policy
+
+        if "backend" in inspect.signature(self.fn).parameters:
+            kwargs.setdefault("backend", self.backend)
+        with kernel_policy(backend=self.backend):
+            recs = self.fn(**kwargs)
+        tag = f"[{self.backend}]"
+        return [
+            replace(
+                r,
+                benchmark=self.name,
+                name=r.name if r.name.endswith(tag) else r.name + tag,
+            )
+            for r in recs
+        ]
 
 
 _REGISTRY: dict[str, BenchSpec] = {}
@@ -52,22 +80,32 @@ def register(
     quick: Optional[dict] = None,
     full: Optional[dict] = None,
     tags: tuple = (),
+    backends: tuple = (),
 ):
-    """Decorator: register ``fn`` as benchmark ``name`` with its metadata."""
+    """Decorator: register ``fn`` as benchmark ``name`` with its metadata.
+
+    With ``backends``, registers one ``name[backend]`` variant per entry
+    (and not the bare ``name``).
+    """
 
     def deco(fn: Callable) -> Callable:
-        if name in _REGISTRY:
-            raise ValueError(f"benchmark {name!r} already registered")
         doc_first = (fn.__doc__ or "").strip().splitlines()
-        _REGISTRY[name] = BenchSpec(
-            name=name,
-            fn=fn,
-            paper_ref=paper_ref,
-            description=description or (doc_first[0] if doc_first else ""),
-            quick=dict(quick or {}),
-            full=dict(full if full is not None else quick or {}),
-            tags=tuple(tags),
-        )
+        desc = description or (doc_first[0] if doc_first else "")
+        variants = [(f"{name}[{b}]", b) for b in backends] if backends else [(name, "")]
+        for vname, _ in variants:  # all-or-nothing: check before any insert
+            if vname in _REGISTRY:
+                raise ValueError(f"benchmark {vname!r} already registered")
+        for vname, backend in variants:
+            _REGISTRY[vname] = BenchSpec(
+                name=vname,
+                fn=fn,
+                paper_ref=paper_ref,
+                description=desc,
+                quick=dict(quick or {}),
+                full=dict(full if full is not None else quick or {}),
+                tags=tuple(tags),
+                backend=backend,
+            )
         return fn
 
     return deco

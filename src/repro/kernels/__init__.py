@@ -1,4 +1,4 @@
-"""Pallas TPU kernels.
+"""Pallas TPU kernels behind a unified dispatch API.
 
 Probe kernels (the paper's microbenchmark methodology, TPU-native):
   - ``pchase``   pointer-chase dependent-load latency probe (Mei & Chu, §3.1)
@@ -11,6 +11,11 @@ Compute kernels (perf-critical model hot-spots):
   - ``ssm_scan``         chunked SSD (Mamba2) scan
 
 Each kernel is TARGETED at TPU (pl.pallas_call + BlockSpec VMEM tiling) and
-VALIDATED in interpret mode on CPU against the pure-jnp oracles in ``ref.py``.
-``ops.py`` holds the jit'd public wrappers.
+VALIDATED against the pure-jnp oracles in ``ref.py``.
+
+``api.py`` is the public entry point: every op is registered with three
+backends — ``pallas`` (native path), ``interpret`` (forced interpret mode),
+and ``xla`` (the ref.py oracle) — and dispatch is governed by the
+context-local ``kernel_policy`` (backend selection, autotuned tiles).
+``ops.py`` holds the deprecated pre-dispatch shims.
 """

@@ -1,0 +1,61 @@
+"""Shared block/layout helpers for the kernel dispatch layer.
+
+Every Pallas wrapper used to repeat the same three snippets: the
+``jax.default_backend() != "tpu"`` interpret heuristic, the
+``min(block, dim)`` clamp, and ad-hoc ``jnp.pad`` calls to round dims up to
+a block multiple.  They live here once; both the Pallas impls and the XLA
+oracle bindings in :mod:`repro.kernels.api` share the layout transforms so
+all backends of an op accept identical natural-layout arguments.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def default_interpret() -> bool:
+    """Pallas kernels run in interpret mode everywhere but real TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def fit_block(block: int, dim: int) -> int:
+    """Clamp a requested block size to the actual dimension."""
+    return min(block, dim)
+
+
+def pad_to_multiple(x: jax.Array, multiple: int, axis: int) -> jax.Array:
+    """Zero-pad ``axis`` of ``x`` up to the next multiple of ``multiple``."""
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def flatten_heads(x: jax.Array) -> jax.Array:
+    """(B, S, H, hd) model layout -> (B*H, S, hd) kernel layout."""
+    b, s, h, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+
+
+def unflatten_heads(x: jax.Array, batch: int) -> jax.Array:
+    """(B*H, S, hd) kernel layout -> (B, S, H, hd) model layout."""
+    bh, s, hd = x.shape
+    return x.reshape(batch, bh // batch, s, hd).transpose(0, 2, 1, 3)
+
+
+def flatten_ssm(u: jax.Array, a_log: jax.Array, b: jax.Array, c: jax.Array):
+    """SSD model layout -> per-(batch*head) kernel layout.
+
+    u (B,S,H,P) -> (B*H,S,P); a_log (B,S,H) -> (B*H,S); head-shared b/c
+    (B,S,N) are broadcast per head -> (B*H,S,N).
+    """
+    bsz, s, h, p = u.shape
+    n = b.shape[-1]
+    uf = u.transpose(0, 2, 1, 3).reshape(bsz * h, s, p)
+    af = a_log.transpose(0, 2, 1).reshape(bsz * h, s)
+    bf = jnp.repeat(b[:, None], h, axis=1).reshape(bsz * h, s, n)
+    cf = jnp.repeat(c[:, None], h, axis=1).reshape(bsz * h, s, n)
+    return uf, af, bf, cf

@@ -1,0 +1,469 @@
+"""Unified kernel dispatch API: op registry, backends, and kernel policy.
+
+The paper's core method is running the *same* operation through different
+hardware paths and comparing them quantitatively.  This module gives the
+reproduction that axis as a first-class API:
+
+- Every kernel is a registered :class:`KernelOp` with named **backends**:
+
+  * ``"pallas"``    the Pallas kernel on its native path (compiled on TPU;
+                    automatically interpret-mode off-TPU, where no Mosaic
+                    compiler exists),
+  * ``"interpret"`` the same Pallas kernel forced through interpret mode on
+                    every platform (the cross-checking path),
+  * ``"xla"``       the pure-jnp oracle from :mod:`repro.kernels.ref`, bound
+                    to the *same natural argument layout* — the "library
+                    implementation" the paper benchmarks against.
+
+- A context-local :func:`kernel_policy` replaces the scattered ``interpret=``
+  booleans and hand-fixed block sizes::
+
+      with kernel_policy(backend="pallas", autotune=True):
+          y = api.matmul(a, b)          # tiles from core.autotune, cached
+
+  Policies nest; unspecified fields inherit from the enclosing policy and the
+  previous policy is restored on exit.
+
+- With ``autotune=True``, tile kwargs not pinned by the caller or the policy
+  are chosen by :mod:`repro.core.autotune` (``choose_matmul_tiles``,
+  ``choose_attention_chunk``, ``choose_ssm_chunk``) and memoized in the
+  persisted :class:`repro.core.tuning.TuningCache` keyed on
+  ``(op, shapes, dtype, backend)``.
+
+``repro.kernels.ops`` remains as thin deprecated shims over this module.
+"""
+from __future__ import annotations
+
+import inspect
+from contextlib import contextmanager
+from contextvars import ContextVar
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tuning
+from repro.core.autotune import (
+    choose_attention_chunk,
+    choose_matmul_tiles,
+    choose_ssm_chunk,
+    dtype_name,
+)
+
+from . import axpy as _axpy
+from . import flash_attention as _fa
+from . import matmul as _mm
+from . import membw as _bw
+from . import pchase as _pc
+from . import ref
+from ._util import (
+    default_interpret,
+    fit_block,
+    flatten_heads,
+    flatten_ssm,
+    pad_to_multiple,
+    unflatten_heads,
+)
+
+BACKENDS = ("pallas", "interpret", "xla")
+_PALLAS_LIKE = ("pallas", "interpret")  # backends that run the Pallas impl
+
+
+def default_backend() -> str:
+    """The backend used when neither the call nor the policy names one."""
+    return "pallas"
+
+
+# ---------------------------------------------------------------------------
+# policy
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class KernelPolicy:
+    """Context-local kernel dispatch settings.
+
+    ``backend`` of None defers to :func:`default_backend`; ``tiles`` maps op
+    name -> tile-kwarg overrides (e.g. ``{"matmul": {"bm": 256}}``) and is
+    merged across nested policies.
+    """
+
+    backend: Optional[str] = None
+    autotune: bool = False
+    tiles: dict = field(default_factory=dict)
+
+
+_POLICY: ContextVar[KernelPolicy] = ContextVar("kernel_policy", default=KernelPolicy())
+
+
+def current_policy() -> KernelPolicy:
+    return _POLICY.get()
+
+
+@contextmanager
+def kernel_policy(backend: Optional[str] = None, autotune: Optional[bool] = None,
+                  tiles: Optional[dict] = None):
+    """Scoped policy override; unspecified fields inherit from the enclosing
+    policy, and the previous policy is restored on exit (exception-safe)."""
+    if backend is not None and backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    outer = _POLICY.get()
+    merged_tiles = dict(outer.tiles)
+    for op_name, ov in (tiles or {}).items():
+        op = _OPS.get(op_name)
+        if op is None:
+            raise ValueError(
+                f"tiles override for unknown op {op_name!r}; registered: {op_names()}"
+            )
+        bad = sorted(set(ov) - set(op.tile_args))
+        if bad:
+            raise ValueError(
+                f"op {op_name!r} has no tile kwarg(s) {bad}; tile args: {list(op.tile_args)}"
+            )
+        merged_tiles[op_name] = {**merged_tiles.get(op_name, {}), **ov}
+    pol = KernelPolicy(
+        backend=outer.backend if backend is None else backend,
+        autotune=outer.autotune if autotune is None else autotune,
+        tiles=merged_tiles,
+    )
+    token = _POLICY.set(pol)
+    try:
+        yield pol
+    finally:
+        _POLICY.reset(token)
+
+
+def resolve_backend(requested: Optional[str] = None) -> str:
+    """The backend a call would dispatch to under the current policy."""
+    return requested or current_policy().backend or default_backend()
+
+
+# ---------------------------------------------------------------------------
+# op registry
+# ---------------------------------------------------------------------------
+class KernelOp:
+    """One registered operation with per-backend implementations.
+
+    Calling the op dispatches through the current :class:`KernelPolicy`;
+    ``backend=`` overrides the policy for a single call.  Tile kwargs are
+    resolved as: explicit kwarg > policy.tiles[op] > autotune (when the
+    policy enables it) > the implementation's defaults.
+    """
+
+    def __init__(self, name: str, backends: tuple, tile_args: tuple = (),
+                 autotuner: Optional[Callable] = None, doc: str = ""):
+        self.name = name
+        self.backends = tuple(backends)
+        self.tile_args = tuple(tile_args)
+        self.autotuner = autotuner  # (args tuple) -> {tile kwarg: value}
+        self.__doc__ = doc
+        self._impls: dict = {}
+        self._accepts: dict = {}  # backend -> frozenset of kwarg names
+        self._all_accepts: frozenset = frozenset()  # union across backends
+
+    def bind(self, backend: str, fn: Callable) -> None:
+        if backend not in self.backends:
+            raise ValueError(f"op {self.name!r} does not declare backend {backend!r}")
+        self._impls[backend] = fn
+        sig = inspect.signature(fn)
+        self._accepts[backend] = frozenset(
+            p.name for p in sig.parameters.values()
+            if p.kind in (p.KEYWORD_ONLY, p.POSITIONAL_OR_KEYWORD)
+        )
+        self._all_accepts = self._all_accepts | self._accepts[backend]
+
+    def defbackend(self, backend: str):
+        """Decorator registering ``fn`` as this op's ``backend`` impl."""
+
+        def deco(fn: Callable) -> Callable:
+            self.bind(backend, fn)
+            return fn
+
+        return deco
+
+    def impl(self, backend: str) -> Callable:
+        try:
+            return self._impls[backend]
+        except KeyError:
+            bound = sorted(self._impls)
+            raise KeyError(
+                f"op {self.name!r} has no backend {backend!r} (bound: {bound})"
+            ) from None
+
+    # -- dispatch -----------------------------------------------------------
+    def _resolve_tiles(self, pol: KernelPolicy, backend: str, args, kwargs) -> dict:
+        out = dict(kwargs)
+        for k, v in pol.tiles.get(self.name, {}).items():
+            if k in self.tile_args:
+                out.setdefault(k, v)
+        if pol.autotune and self.autotuner is not None:
+            if any(t not in out for t in self.tile_args):
+                cache = tuning.get_cache()
+                key = tuning.make_key(self.name, args, backend)
+                tuned = cache.lookup(key)
+                if tuned is None:
+                    tuned = self.autotuner(args)
+                    cache.store(key, tuned)
+                for t, v in tuned.items():
+                    out.setdefault(t, v)
+        return out
+
+    def bound(self, *args, backend: Optional[str] = None, **kwargs) -> Callable:
+        """Resolve dispatch (backend, tiles, kwarg filtering) for these
+        ``args`` once and return the impl partially applied with the final
+        kwargs — timing loops call the result directly, keeping Python
+        dispatch out of the measured path."""
+        pol = current_policy()
+        be = backend or pol.backend or default_backend()
+        if be not in BACKENDS:
+            raise ValueError(f"unknown backend {be!r}; expected one of {BACKENDS}")
+        impl = self.impl(be)
+        # a kwarg no backend understands is a caller bug, not a backend
+        # difference — raise instead of silently running with defaults
+        unknown = sorted(set(kwargs) - self._all_accepts)
+        if unknown:
+            raise TypeError(
+                f"op {self.name!r} got unexpected keyword argument(s) {unknown}; "
+                f"accepted across backends: {sorted(self._all_accepts)}"
+            )
+        if be in _PALLAS_LIKE:
+            kwargs = self._resolve_tiles(pol, be, args, kwargs)
+            kwargs.setdefault("interpret", True if be == "interpret" else default_interpret())
+        accepts = self._accepts[be]
+        kwargs = {k: v for k, v in kwargs.items() if k in accepts}
+        return partial(impl, **kwargs)
+
+    def __call__(self, *args, backend: Optional[str] = None, **kwargs):
+        return self.bound(*args, backend=backend, **kwargs)(*args)
+
+    def __repr__(self) -> str:
+        return f"KernelOp({self.name!r}, backends={sorted(self._impls)})"
+
+
+_OPS: dict[str, KernelOp] = {}
+
+
+def kernel_op(name: str, *, backends: tuple = BACKENDS, tile_args: tuple = (),
+              autotuner: Optional[Callable] = None):
+    """Register the decorated function as op ``name``'s Pallas implementation
+    (serving both the ``pallas`` and ``interpret`` backends — the latter is a
+    forced ``interpret=True``) and return the :class:`KernelOp` dispatcher.
+    Bind further backends with ``@<op>.defbackend("xla")``."""
+
+    def deco(pallas_fn: Callable) -> KernelOp:
+        if name in _OPS:
+            raise ValueError(f"kernel op {name!r} already registered")
+        op = KernelOp(name, backends, tile_args, autotuner,
+                      doc=(pallas_fn.__doc__ or ""))
+        for be in _PALLAS_LIKE:
+            if be in backends:
+                op.bind(be, pallas_fn)
+        _OPS[name] = op
+        return op
+
+    return deco
+
+
+def get_op(name: str) -> KernelOp:
+    try:
+        return _OPS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown kernel op {name!r}; registered: {', '.join(op_names())}"
+        ) from None
+
+
+def op_names() -> list:
+    return sorted(_OPS)
+
+
+# ---------------------------------------------------------------------------
+# autotuners (core.autotune glue)
+# ---------------------------------------------------------------------------
+def _matmul_autotuner(args) -> dict:
+    a, b = args[0], args[1]
+    (m, k), n = a.shape, b.shape[1]
+    tc = choose_matmul_tiles(m, k, n, dtype_name(a.dtype))
+    return {"bm": tc.bm, "bk": tc.bk, "bn": tc.bn}
+
+
+def _attention_autotuner(args) -> dict:
+    q, k = args[0], args[1]
+    _, sq, h, hd = q.shape
+    chunk = choose_attention_chunk(k.shape[1], hd, h, dtype_name(q.dtype))
+    return {"bq": fit_block(128, sq), "bk": chunk}
+
+
+def _ssm_autotuner(args) -> dict:
+    u, b = args[0], args[2]
+    return {
+        "chunk": choose_ssm_chunk(u.shape[1], u.shape[-1], b.shape[-1],
+                                  dtype_name(u.dtype))
+    }
+
+
+# ---------------------------------------------------------------------------
+# ops — Pallas impls own padding/reshaping so callers pass natural layouts;
+# the xla bindings accept the *same* layouts (backend interchangeability).
+# ---------------------------------------------------------------------------
+@kernel_op("axpy", tile_args=("block_rows", "block_cols"))
+@partial(jax.jit, static_argnames=("block_rows", "block_cols", "interpret"))
+def axpy(x, y, alpha, *, block_rows=8, block_cols=512, interpret=True):
+    """alpha*x + y over (R, C) tiles — the Ch.1 access-width example."""
+    return _axpy.axpy_pallas(
+        x, y, alpha, block_rows=block_rows, block_cols=block_cols, interpret=interpret
+    )
+
+
+@axpy.defbackend("xla")
+@jax.jit
+def _axpy_xla(x, y, alpha):
+    return ref.axpy_ref(x, y, alpha)
+
+
+@kernel_op("stream_copy", tile_args=("block_rows", "block_cols"))
+@partial(jax.jit, static_argnames=("block_rows", "block_cols", "interpret"))
+def stream_copy(x, *, block_rows=8, block_cols=512, interpret=True):
+    """HBM->VMEM->HBM round-trip bandwidth probe."""
+    return _bw.stream_copy(x, block_rows=block_rows, block_cols=block_cols, interpret=interpret)
+
+
+@stream_copy.defbackend("xla")
+@jax.jit
+def _stream_copy_xla(x):
+    return ref.copy_ref(x)
+
+
+@kernel_op("stream_reduce", tile_args=("block_rows", "block_cols"))
+@partial(jax.jit, static_argnames=("block_rows", "block_cols", "interpret"))
+def stream_reduce(x, *, block_rows=8, block_cols=512, interpret=True):
+    """Read-bandwidth probe: (1,1) fp32 checksum of the streamed array."""
+    return _bw.stream_reduce(x, block_rows=block_rows, block_cols=block_cols, interpret=interpret)
+
+
+@stream_reduce.defbackend("xla")
+@jax.jit
+def _stream_reduce_xla(x):
+    return ref.reduce_ref(x)
+
+
+@kernel_op("strided_reduce", tile_args=("block_rows",))
+@partial(jax.jit, static_argnames=("stride", "block_rows", "interpret"))
+def strided_reduce(x, *, stride, block_rows=64, interpret=True):
+    """Sparse-access reduce probing load granularity (paper Tab 3.1)."""
+    return _bw.strided_reduce(x, stride=stride, block_rows=block_rows, interpret=interpret)
+
+
+@strided_reduce.defbackend("xla")
+@partial(jax.jit, static_argnames=("stride",))
+def _strided_reduce_xla(x, *, stride):
+    return ref.strided_reduce_ref(x, stride)
+
+
+@kernel_op("pchase")
+@partial(jax.jit, static_argnames=("steps", "interpret"))
+def pchase(perm, steps, *, interpret=True):
+    """Dependent-load pointer chase; returns the final index as (1,1) int32."""
+    return _pc.pchase_pallas(perm, steps, interpret=interpret)
+
+
+@pchase.defbackend("xla")
+@partial(jax.jit, static_argnames=("steps",))
+def _pchase_xla(perm, steps):
+    def body(_, idx):
+        return perm[idx]
+
+    return jax.lax.fori_loop(0, steps, body, jnp.int32(0)).reshape(1, 1)
+
+
+@kernel_op("matmul", tile_args=("bm", "bn", "bk"), autotuner=_matmul_autotuner)
+@partial(jax.jit, static_argnames=("bm", "bn", "bk", "out_dtype", "interpret"))
+def matmul(a, b, *, bm=128, bn=128, bk=128, out_dtype=None, interpret=True):
+    """MXU-tiled matmul (the §4.4 GEMM-throughput probe target)."""
+    m, k = a.shape
+    _, n = b.shape
+    bm, bk, bn = fit_block(bm, m), fit_block(bk, k), fit_block(bn, n)
+    a = pad_to_multiple(pad_to_multiple(a, bm, 0), bk, 1)
+    b = pad_to_multiple(pad_to_multiple(b, bk, 0), bn, 1)
+    out = _mm.matmul_pallas(a, b, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype, interpret=interpret)
+    return out[:m, :n]
+
+
+@matmul.defbackend("xla")
+@partial(jax.jit, static_argnames=("out_dtype",))
+def _matmul_xla(a, b, *, out_dtype=None):
+    return ref.matmul_ref(a, b, out_dtype)
+
+
+@kernel_op("flash_attention", tile_args=("bq", "bk"), autotuner=_attention_autotuner)
+@partial(jax.jit, static_argnames=("causal", "q_offset", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal=True, q_offset=0, bq=128, bk=128, interpret=True):
+    """Blockwise-softmax attention; q/k/v in model layout (B, S, H, hd)."""
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    qf, kf, vf = flatten_heads(q), flatten_heads(k), flatten_heads(v)
+    bq_, bk_ = fit_block(bq, sq), fit_block(bk, skv)
+    qf = pad_to_multiple(qf, bq_, 1)
+    kf = pad_to_multiple(kf, bk_, 1)
+    vf = pad_to_multiple(vf, bk_, 1)
+    out = _fa.flash_attention_pallas(
+        qf, kf, vf, causal=causal, q_offset=q_offset,
+        bq=bq_, bk=bk_, kv_len=skv, interpret=interpret,
+    )
+    return unflatten_heads(out[:, :sq], b)
+
+
+@flash_attention.defbackend("xla")
+@partial(jax.jit, static_argnames=("causal", "q_offset"))
+def _flash_attention_xla(q, k, v, *, causal=True, q_offset=0):
+    out = ref.flash_attention_ref(
+        flatten_heads(q), flatten_heads(k), flatten_heads(v),
+        causal=causal, q_offset=q_offset,
+    )
+    return unflatten_heads(out, q.shape[0])
+
+
+@kernel_op("ssm_scan", tile_args=("chunk",), autotuner=_ssm_autotuner)
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssm_scan(u, a_log, b, c, *, chunk=256, interpret=True):
+    """Chunked SSD scan; u (B,S,H,P), a_log (B,S,H), b/c (B,S,N) head-shared."""
+    from . import ssm_scan as _ssd
+
+    bsz, s, _, _ = u.shape
+    chunk = fit_block(chunk, s)
+    u = pad_to_multiple(u, chunk, 1)
+    a_log = pad_to_multiple(a_log, chunk, 1)
+    b = pad_to_multiple(b, chunk, 1)
+    c = pad_to_multiple(c, chunk, 1)
+    y = _ssd.ssm_scan_pallas(*flatten_ssm(u, a_log, b, c), chunk=chunk, interpret=interpret)
+    return unflatten_heads(y, bsz)[:, :s]
+
+
+@ssm_scan.defbackend("xla")
+@jax.jit
+def _ssm_scan_xla(u, a_log, b, c):
+    y = ref.ssm_scan_ref(*flatten_ssm(u, a_log, b, c))
+    return unflatten_heads(y, u.shape[0])
+
+
+__all__ = [
+    "BACKENDS",
+    "KernelOp",
+    "KernelPolicy",
+    "axpy",
+    "current_policy",
+    "default_backend",
+    "default_interpret",
+    "flash_attention",
+    "get_op",
+    "kernel_op",
+    "kernel_policy",
+    "matmul",
+    "op_names",
+    "pchase",
+    "resolve_backend",
+    "ssm_scan",
+    "stream_copy",
+    "stream_reduce",
+    "strided_reduce",
+]

@@ -1,120 +1,85 @@
-"""Public jit'd wrappers around the Pallas kernels.
+"""DEPRECATED jit'd wrappers — thin shims over :mod:`repro.kernels.api`.
 
-``interpret`` defaults to True off-TPU (CPU validation per the assignment)
-and False on real TPU backends.  Wrappers own padding/reshaping so callers
-pass natural model layouts.
+This module predates the unified dispatch API.  The old per-function
+``interpret=`` boolean maps onto the backend axis:
+
+    ops.axpy(x, y, a)                   -> api.axpy(x, y, a)     (policy backend)
+    ops.axpy(x, y, a, interpret=True)   -> backend="interpret"
+    ops.axpy(x, y, a, interpret=False)  -> backend="pallas"
+
+New code should call the ops in :mod:`repro.kernels.api` directly (optionally
+under a :func:`repro.kernels.api.kernel_policy`).  These shims stay importable
+for one deprecation cycle and emit :class:`DeprecationWarning`.
 """
 from __future__ import annotations
 
-from functools import partial
+import warnings
 
-import jax
-import jax.numpy as jnp
-
-from . import axpy as _axpy
-from . import flash_attention as _fa
-from . import matmul as _mm
-from . import membw as _bw
-from . import pchase as _pc
+from . import api
 
 
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
-# ---------------------------------------------------------------------------
-@partial(jax.jit, static_argnames=("block_rows", "block_cols", "interpret"))
-def axpy(x, y, alpha, *, block_rows=8, block_cols=512, interpret=None):
-    interpret = _default_interpret() if interpret is None else interpret
-    return _axpy.axpy_pallas(
-        x, y, alpha, block_rows=block_rows, block_cols=block_cols, interpret=interpret
+def _warn(name: str) -> None:
+    warnings.warn(
+        f"repro.kernels.ops.{name} is deprecated; use repro.kernels.api.{name} "
+        f"(dispatch via kernel_policy instead of interpret=)",
+        DeprecationWarning,
+        stacklevel=3,
     )
 
 
-@partial(jax.jit, static_argnames=("block_rows", "block_cols", "interpret"))
+def _dispatch(interpret) -> dict:
+    """None preserves the old default (policy/auto); an explicit boolean pins
+    the matching Pallas backend AND the interpret flag itself, so
+    ``interpret=False`` still demands the compiled path (failing loudly
+    off-TPU) exactly as the pre-dispatch wrappers did."""
+    if interpret is None:
+        return {"backend": None}
+    return {"backend": "interpret" if interpret else "pallas", "interpret": interpret}
+
+
+def axpy(x, y, alpha, *, block_rows=8, block_cols=512, interpret=None):
+    _warn("axpy")
+    return api.axpy(x, y, alpha, block_rows=block_rows, block_cols=block_cols,
+                    **_dispatch(interpret))
+
+
 def stream_copy(x, *, block_rows=8, block_cols=512, interpret=None):
-    interpret = _default_interpret() if interpret is None else interpret
-    return _bw.stream_copy(x, block_rows=block_rows, block_cols=block_cols, interpret=interpret)
+    _warn("stream_copy")
+    return api.stream_copy(x, block_rows=block_rows, block_cols=block_cols,
+                           **_dispatch(interpret))
 
 
-@partial(jax.jit, static_argnames=("block_rows", "block_cols", "interpret"))
 def stream_reduce(x, *, block_rows=8, block_cols=512, interpret=None):
-    interpret = _default_interpret() if interpret is None else interpret
-    return _bw.stream_reduce(x, block_rows=block_rows, block_cols=block_cols, interpret=interpret)
+    _warn("stream_reduce")
+    return api.stream_reduce(x, block_rows=block_rows, block_cols=block_cols,
+                             **_dispatch(interpret))
 
 
-@partial(jax.jit, static_argnames=("stride", "block_rows", "interpret"))
 def strided_reduce(x, *, stride, block_rows=64, interpret=None):
-    interpret = _default_interpret() if interpret is None else interpret
-    return _bw.strided_reduce(x, stride=stride, block_rows=block_rows, interpret=interpret)
+    _warn("strided_reduce")
+    return api.strided_reduce(x, stride=stride, block_rows=block_rows,
+                              **_dispatch(interpret))
 
 
-@partial(jax.jit, static_argnames=("steps", "interpret"))
 def pchase(perm, steps, *, interpret=None):
-    interpret = _default_interpret() if interpret is None else interpret
-    return _pc.pchase_pallas(perm, steps, interpret=interpret)
+    _warn("pchase")
+    return api.pchase(perm, steps, **_dispatch(interpret))
 
 
-@partial(jax.jit, static_argnames=("bm", "bn", "bk", "out_dtype", "interpret"))
 def matmul(a, b, *, bm=128, bn=128, bk=128, out_dtype=None, interpret=None):
-    interpret = _default_interpret() if interpret is None else interpret
-    m, k = a.shape
-    k2, n = b.shape
-    bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
-    pm, pk, pn = (-m) % bm, (-k) % bk, (-n) % bn
-    if pm or pk:
-        a = jnp.pad(a, ((0, pm), (0, pk)))
-    if pk or pn:
-        b = jnp.pad(b, ((0, pk), (0, pn)))
-    out = _mm.matmul_pallas(a, b, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype, interpret=interpret)
-    return out[:m, :n]
+    _warn("matmul")
+    return api.matmul(a, b, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
+                      **_dispatch(interpret))
 
 
-@partial(jax.jit, static_argnames=("causal", "q_offset", "bq", "bk", "interpret"))
 def flash_attention(q, k, v, *, causal=True, q_offset=0, bq=128, bk=128, interpret=None):
     """q/k/v in model layout (B, S, H, hd) with matching head counts."""
-    interpret = _default_interpret() if interpret is None else interpret
-    b, sq, h, hd = q.shape
-    skv = k.shape[1]
-
-    def flat(x):  # (B,S,H,hd) -> (B*H, S, hd)
-        return x.transpose(0, 2, 1, 3).reshape(b * h, x.shape[1], hd)
-
-    qf, kf, vf = flat(q), flat(k), flat(v)
-    bq_, bk_ = min(bq, sq), min(bk, skv)
-    pq, pk_ = (-sq) % bq_, (-skv) % bk_
-    if pq:
-        qf = jnp.pad(qf, ((0, 0), (0, pq), (0, 0)))
-    if pk_:
-        kf = jnp.pad(kf, ((0, 0), (0, pk_), (0, 0)))
-        vf = jnp.pad(vf, ((0, 0), (0, pk_), (0, 0)))
-    out = _fa.flash_attention_pallas(
-        qf, kf, vf, causal=causal, q_offset=q_offset,
-        bq=bq_, bk=bk_, kv_len=skv, interpret=interpret,
-    )
-    out = out[:, :sq]
-    return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)
+    _warn("flash_attention")
+    return api.flash_attention(q, k, v, causal=causal, q_offset=q_offset, bq=bq, bk=bk,
+                               **_dispatch(interpret))
 
 
-@partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssm_scan(u, a_log, b, c, *, chunk=256, interpret=None):
     """u (B,S,H,P); a_log (B,S,H); b/c (B,S,N) (head-shared) -> y (B,S,H,P)."""
-    interpret = _default_interpret() if interpret is None else interpret
-    from . import ssm_scan as _ssd
-
-    bsz, s, h, p = u.shape
-    n = b.shape[-1]
-    chunk = min(chunk, s)
-    pad = (-s) % chunk
-    if pad:
-        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
-        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
-        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
-    sp = s + pad
-    uf = u.transpose(0, 2, 1, 3).reshape(bsz * h, sp, p)
-    af = a_log.transpose(0, 2, 1).reshape(bsz * h, sp)
-    bf = jnp.repeat(b[:, None], h, axis=1).reshape(bsz * h, sp, n)
-    cf = jnp.repeat(c[:, None], h, axis=1).reshape(bsz * h, sp, n)
-    y = _ssd.ssm_scan_pallas(uf, af, bf, cf, chunk=chunk, interpret=interpret)
-    return y.reshape(bsz, h, sp, p).transpose(0, 2, 1, 3)[:, :s]
+    _warn("ssm_scan")
+    return api.ssm_scan(u, a_log, b, c, chunk=chunk, **_dispatch(interpret))

@@ -145,15 +145,19 @@ def blockwise_attention(q, k, v, *, causal: bool, chunk: int, q_offset: int = 0)
 
 
 def pallas_attention(q, k, v, *, causal: bool, chunk: int, q_offset: int = 0) -> jax.Array:
-    """Flash-attention Pallas kernel path (interpret-mode on CPU)."""
-    from repro.kernels import ops as kops
+    """Flash-attention kernel path via the dispatch API (interpret off-TPU).
+
+    ``cfg.attn_chunk`` becomes the KV block size; a ``kernel_policy`` in
+    scope can re-route the backend or autotune the tiles instead.
+    """
+    from repro.kernels import api
 
     n_kv = k.shape[2]
     g = q.shape[2] // n_kv
     if g > 1:  # kernel takes matched head counts; expand kv (still exact)
         k = jnp.repeat(k, g, axis=2)
         v = jnp.repeat(v, g, axis=2)
-    return kops.flash_attention(q, k, v, causal=causal, q_offset=q_offset)
+    return api.flash_attention(q, k, v, causal=causal, q_offset=q_offset, bk=chunk)
 
 
 def attention_impl(cfg):

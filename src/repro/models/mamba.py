@@ -129,7 +129,12 @@ def ssd_chunked(u, a_log, B_, C_, h0, chunk: int):
 
 
 def mamba_forward(p: Params, x: jax.Array, cfg, h0=None, return_state: bool = False):
-    """Full-sequence Mamba2 block (no residual).  x (B,S,d)."""
+    """Full-sequence Mamba2 block (no residual).  x (B,S,d).
+
+    ``cfg.ssm_impl == "pallas"`` routes the scan through the dispatch-API
+    kernel; stateful calls (``h0`` given or ``return_state=True``) always use
+    the jnp chunked scan — the kernel has no initial/final-state interface.
+    """
     bsz, s, d = x.shape
     d_in, h, conv_dim = mamba_dims(cfg)
     n, pd = cfg.ssm_state, cfg.ssm_head_dim
@@ -149,9 +154,17 @@ def mamba_forward(p: Params, x: jax.Array, cfg, h0=None, return_state: bool = Fa
     a_log = -jnp.exp(p["A_log"].astype(jnp.float32))[None, None] * delta  # (B,S,H)
     u = xh * delta.astype(dt)[..., None]
 
-    if h0 is None:
-        h0 = jnp.zeros((bsz, h, pd, n), jnp.float32)
-    y, h_final = ssd_chunked(u, a_log, b_, c_, h0, cfg.ssm_chunk)
+    if cfg.ssm_impl == "pallas" and h0 is None and not return_state:
+        # dispatch-API kernel path: head-shared B/C layout matches directly;
+        # the kernel owns chunking/padding and starts from a zero state
+        from repro.kernels import api
+
+        y = api.ssm_scan(u, a_log, b_, c_, chunk=cfg.ssm_chunk)
+        h_final = None
+    else:
+        if h0 is None:
+            h0 = jnp.zeros((bsz, h, pd, n), jnp.float32)
+        y, h_final = ssd_chunked(u, a_log, b_, c_, h0, cfg.ssm_chunk)
     y = y + xh * p["D"].astype(dt)[None, None, :, None]
     y = y.reshape(bsz, s, d_in)
     y = rmsnorm(p["out_norm"], y, cfg.norm_eps) * jax.nn.silu(z)

@@ -47,7 +47,10 @@ def test_all_paper_benchmarks_registered():
 
 
 def test_runner_select_filters_by_prefix():
-    assert runner.select(["gem"]) == ["gemm"]
+    # a bare prefix sweeps up the backend-parameterized variants too —
+    # `run gemm` is the paper-style side-by-side comparison
+    assert runner.select(["gem"]) == ["gemm", "gemm[pallas]", "gemm[xla]"]
+    assert runner.select(["gemm[xla]"]) == ["gemm[xla]"]
     assert runner.select() == registry.names()
 
 

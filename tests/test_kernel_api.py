@@ -1,0 +1,423 @@
+"""Unified kernel dispatch API: backend parity, policy semantics, autotune
+cache, registry backend variants, and the deprecated ``ops`` shims."""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import tuning
+from repro.core.pchase import single_cycle_permutation
+from repro.kernels import api, ref
+
+RNG = np.random.default_rng(7)
+
+
+def _arr(shape, dtype=np.float32, scale=1.0):
+    return jnp.asarray((RNG.normal(size=shape) * scale).astype(dtype))
+
+
+def _flat(x):
+    b, s, h, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+
+
+# ---------------------------------------------------------------------------
+# backend parity: every backend of every registered op matches the oracle
+# ---------------------------------------------------------------------------
+def _axpy_case():
+    x, y = _arr((16, 256)), _arr((16, 256))
+    return (x, y, 2.5), {"block_cols": 128}, ref.axpy_ref(x, y, 2.5)
+
+
+def _stream_copy_case():
+    x = _arr((16, 512))
+    return (x,), {}, ref.copy_ref(x)
+
+
+def _stream_reduce_case():
+    x = _arr((16, 512))
+    return (x,), {}, ref.reduce_ref(x)
+
+
+def _strided_reduce_case():
+    x = _arr((128, 128))
+    return (x,), {"stride": 4}, ref.strided_reduce_ref(x, 4)
+
+
+def _pchase_case():
+    perm = single_cycle_permutation(96, seed=3)
+    want = jnp.asarray([[ref.pchase_ref(perm, 55)]], jnp.int32)
+    return (jnp.asarray(perm), 55), {}, want
+
+
+def _matmul_case():
+    a, b = _arr((96, 160), scale=0.3), _arr((160, 64), scale=0.3)
+    return (a, b), {"bm": 32, "bk": 64, "bn": 32}, ref.matmul_ref(a, b)
+
+
+def _flash_attention_case():
+    q, k, v = (_arr((2, 48, 2, 32), scale=0.5) for _ in range(3))
+    want = ref.flash_attention_ref(_flat(q), _flat(k), _flat(v), causal=True)
+    want = want.reshape(2, 2, 48, 32).transpose(0, 2, 1, 3)
+    return (q, k, v), {"causal": True, "bq": 16, "bk": 16}, want
+
+
+def _ssm_scan_case():
+    bsz, s, h, p, n = 1, 40, 2, 8, 4
+    u = _arr((bsz, s, h, p))
+    a = -jnp.abs(_arr((bsz, s, h))) * 0.2
+    b_, c_ = _arr((bsz, s, n)), _arr((bsz, s, n))
+    want = ref.ssm_scan_ref(
+        _flat(u), a.transpose(0, 2, 1).reshape(bsz * h, s),
+        jnp.repeat(b_[:, None], h, 1).reshape(bsz * h, s, n),
+        jnp.repeat(c_[:, None], h, 1).reshape(bsz * h, s, n),
+    ).reshape(bsz, h, s, p).transpose(0, 2, 1, 3)
+    return (u, a, b_, c_), {"chunk": 16}, want
+
+
+_PARITY_CASES = {
+    "axpy": _axpy_case,
+    "stream_copy": _stream_copy_case,
+    "stream_reduce": _stream_reduce_case,
+    "strided_reduce": _strided_reduce_case,
+    "pchase": _pchase_case,
+    "matmul": _matmul_case,
+    "flash_attention": _flash_attention_case,
+    "ssm_scan": _ssm_scan_case,
+}
+
+
+def test_every_registered_op_has_a_parity_case():
+    assert set(api.op_names()) == set(_PARITY_CASES)
+
+
+@pytest.mark.parametrize("op_name", sorted(_PARITY_CASES))
+@pytest.mark.parametrize("backend", api.BACKENDS)
+def test_backend_parity(op_name, backend):
+    args, kwargs, want = _PARITY_CASES[op_name]()
+    got = api.get_op(op_name)(*args, backend=backend, **kwargs)
+    if np.asarray(want).dtype == np.int32:
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    else:
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            rtol=3e-4, atol=3e-4,
+        )
+
+
+def test_unknown_backend_and_op_raise():
+    with pytest.raises(ValueError, match="unknown backend"):
+        api.matmul(_arr((8, 8)), _arr((8, 8)), backend="cuda")
+    with pytest.raises(KeyError, match="unknown kernel op"):
+        api.get_op("conv3d")
+
+
+def test_unknown_kwarg_raises_not_swallowed():
+    q = _arr((1, 8, 1, 8))
+    with pytest.raises(TypeError, match="casual"):
+        api.flash_attention(q, q, q, casual=False)  # typo for causal
+    with pytest.raises(TypeError, match="block_colss"):
+        api.axpy(_arr((8, 128)), _arr((8, 128)), 1.0, block_colss=64)
+
+
+# ---------------------------------------------------------------------------
+# kernel_policy semantics
+# ---------------------------------------------------------------------------
+def test_policy_nesting_inherits_and_restores():
+    assert api.resolve_backend() == api.default_backend()
+    with api.kernel_policy(backend="xla"):
+        assert api.resolve_backend() == "xla"
+        with api.kernel_policy(autotune=True):  # backend inherited
+            pol = api.current_policy()
+            assert pol.backend == "xla" and pol.autotune
+            with api.kernel_policy(backend="interpret", autotune=False):
+                assert api.resolve_backend() == "interpret"
+                assert not api.current_policy().autotune
+            assert api.resolve_backend() == "xla"
+            assert api.current_policy().autotune
+        assert not api.current_policy().autotune
+    assert api.resolve_backend() == api.default_backend()
+    assert not api.current_policy().autotune
+
+
+def test_policy_restored_on_exception():
+    with pytest.raises(RuntimeError):
+        with api.kernel_policy(backend="interpret"):
+            raise RuntimeError("boom")
+    assert api.resolve_backend() == api.default_backend()
+
+
+def test_policy_rejects_unknown_backend():
+    with pytest.raises(ValueError, match="unknown backend"):
+        with api.kernel_policy(backend="cuda"):
+            pass
+
+
+def test_policy_tiles_merge_per_op():
+    with api.kernel_policy(tiles={"matmul": {"bm": 32}}):
+        with api.kernel_policy(tiles={"matmul": {"bn": 16}, "axpy": {"block_cols": 64}}):
+            tiles = api.current_policy().tiles
+            assert tiles["matmul"] == {"bm": 32, "bn": 16}
+            assert tiles["axpy"] == {"block_cols": 64}
+        assert api.current_policy().tiles == {"matmul": {"bm": 32}}
+
+
+def test_policy_tiles_overrides_are_validated():
+    with pytest.raises(ValueError, match="bM"):
+        with api.kernel_policy(tiles={"matmul": {"bM": 256}}):  # typo for bm
+            pass
+    with pytest.raises(ValueError, match="unknown op"):
+        with api.kernel_policy(tiles={"matmule": {"bm": 256}}):
+            pass
+
+
+def test_bound_matches_call_and_prebinds_dispatch():
+    a, b = _arr((32, 48), scale=0.3), _arr((48, 16), scale=0.3)
+    f = api.matmul.bound(a, b, backend="interpret", bm=16, bk=16, bn=16)
+    np.testing.assert_allclose(
+        np.asarray(f(a, b)),
+        np.asarray(api.matmul(a, b, backend="interpret", bm=16, bk=16, bn=16)),
+        rtol=1e-5, atol=1e-5,
+    )
+    # the bound callable pinned its backend at bind time: an outer policy
+    # change no longer affects it
+    with api.kernel_policy(backend="xla"):
+        np.testing.assert_allclose(
+            np.asarray(f(a, b)), np.asarray(ref.matmul_ref(a, b)), rtol=1e-4, atol=1e-4
+        )
+
+
+def test_probes_honor_ambient_policy_backend():
+    from repro.core import probes
+
+    with api.kernel_policy(backend="interpret"):
+        res = probes.probe_matmul_throughput(sizes=(16,))
+    assert res.meta["backend"] == "interpret"
+    res = probes.probe_matmul_throughput(sizes=(16,))
+    assert res.meta["backend"] == "xla"  # probe default without a policy
+
+
+def test_policy_backend_drives_dispatch_and_drops_tile_kwargs():
+    a, b = _arr((32, 32)), _arr((32, 32))
+    with api.kernel_policy(backend="xla"):
+        # tile kwargs are meaningless for the xla impl and must be dropped
+        got = api.matmul(a, b, bm=8, bk=8, bn=8)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.matmul_ref(a, b)), rtol=1e-5, atol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# autotune cache
+# ---------------------------------------------------------------------------
+@pytest.fixture
+def fresh_cache(tmp_path):
+    path = tmp_path / "tuning.json"
+    cache = tuning.configure(str(path))
+    yield cache, path
+    tuning.configure()  # reset to in-memory for other tests
+
+
+def test_autotune_cache_miss_then_hit_and_persistence(fresh_cache):
+    cache, path = fresh_cache
+    a, b = jnp.ones((256, 256)), jnp.ones((256, 256))
+    with api.kernel_policy(backend="interpret", autotune=True):
+        api.matmul(a, b)
+    assert (cache.hits, cache.misses) == (0, 1)
+    assert len(cache) == 1 and path.exists()
+    with api.kernel_policy(backend="interpret", autotune=True):
+        api.matmul(a, b)
+    assert (cache.hits, cache.misses) == (1, 1)
+    # a different shape is a different key
+    with api.kernel_policy(backend="interpret", autotune=True):
+        api.matmul(jnp.ones((128, 256)), b)
+    assert cache.misses == 2 and len(cache) == 2
+
+    reloaded = tuning.TuningCache(path=str(path))
+    assert reloaded.entries == cache.entries
+    key = tuning.make_key("matmul", (a, b), "interpret")
+    tiles = reloaded.lookup(key)
+    assert set(tiles) == {"bm", "bk", "bn"}
+    assert all(v >= 1 for v in tiles.values())
+
+
+def test_autotune_not_consulted_without_policy(fresh_cache):
+    cache, _ = fresh_cache
+    api.matmul(jnp.ones((64, 64)), jnp.ones((64, 64)), backend="interpret")
+    assert (cache.hits, cache.misses) == (0, 0)
+
+
+def test_explicit_tiles_beat_autotune(fresh_cache):
+    cache, _ = fresh_cache
+    a, b = jnp.ones((256, 256)), jnp.ones((256, 256))
+    with api.kernel_policy(backend="interpret", autotune=True):
+        api.matmul(a, b, bm=64, bk=64, bn=64)  # fully pinned: no lookup
+    assert (cache.hits, cache.misses) == (0, 0)
+
+
+def test_cache_save_merges_entries_from_other_writers(tmp_path):
+    path = str(tmp_path / "shared.json")
+    a = tuning.TuningCache(path=path)
+    a.store("matmul|pallas|f32[1,1]", {"bm": 128})
+    b = tuning.TuningCache(path=path)  # picks up a's entry
+    b.store("matmul|pallas|f32[2,2]", {"bm": 256})
+    a.store("matmul|pallas|f32[3,3]", {"bm": 512})  # must not erase b's write
+    merged = tuning.TuningCache(path=path)
+    assert set(merged.entries) == {
+        "matmul|pallas|f32[1,1]", "matmul|pallas|f32[2,2]", "matmul|pallas|f32[3,3]"
+    }
+
+
+def test_register_variant_collision_leaves_no_partial_registration():
+    from repro.core import registry
+
+    @registry.register("t_collide", backends=("xla",), quick={})
+    def bench_a():
+        return []
+
+    try:
+        with pytest.raises(ValueError, match="already registered"):
+            @registry.register("t_collide", backends=("pallas", "xla"), quick={})
+            def bench_b():
+                return []
+
+        assert "t_collide[pallas]" not in registry.names()  # no orphan variant
+    finally:
+        registry.unregister("t_collide[xla]")
+        registry.unregister("t_collide[pallas]")
+
+
+def test_shape_key_stable():
+    a = jnp.ones((8, 16), jnp.float32)
+    key = tuning.make_key("matmul", (a, a, 3.5), "pallas")
+    assert key == "matmul|pallas|float32[8,16];float32[8,16]"
+
+
+# ---------------------------------------------------------------------------
+# registry backend variants
+# ---------------------------------------------------------------------------
+def test_registry_backend_variants_run_under_policy():
+    from repro.bench.schema import BenchRecord
+    from repro.core import registry
+
+    seen = {}
+
+    @registry.register("t_apivar", backends=("pallas", "xla"), quick={"n": 4})
+    def bench_t_apivar(n=4, backend=""):
+        seen[backend] = api.resolve_backend()
+        return [
+            BenchRecord(name=f"t_apivar_row{n}", benchmark="t_apivar", x=n,
+                        value=1.0, unit="GB/s")
+        ]
+
+    try:
+        assert "t_apivar" not in registry.names()
+        assert {"t_apivar[pallas]", "t_apivar[xla]"} <= set(registry.names())
+        for be in ("pallas", "xla"):
+            spec = registry.get(f"t_apivar[{be}]")
+            assert spec.backend == be
+            recs = spec.run("quick")
+            assert seen[be] == be  # policy active while the fn ran
+            assert recs[0].name == f"t_apivar_row4[{be}]"
+            assert recs[0].benchmark == f"t_apivar[{be}]"
+    finally:
+        registry.unregister("t_apivar[pallas]")
+        registry.unregister("t_apivar[xla]")
+
+
+def test_builtin_backend_variants_registered():
+    from repro.bench import runner
+
+    names = runner.select(["gemm", "axpy"])
+    assert {"gemm[pallas]", "gemm[xla]", "axpy[pallas]", "axpy[xla]"} <= set(names)
+
+
+# ---------------------------------------------------------------------------
+# deprecated ops shims
+# ---------------------------------------------------------------------------
+def test_ops_shims_importable_warn_and_match():
+    from repro.kernels import ops
+
+    a, b = _arr((64, 48), scale=0.3), _arr((48, 32), scale=0.3)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        got = ops.matmul(a, b, bm=32, bk=16, bn=32)
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.matmul_ref(a, b)), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_ops_interpret_kwarg_maps_to_backend():
+    from repro.kernels import ops
+
+    x, y = _arr((8, 128)), _arr((8, 128))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        got = ops.axpy(x, y, 2.0, block_cols=128, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.axpy_ref(x, y, 2.0)), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_ops_interpret_false_still_demands_compiled_path():
+    """The old wrappers failed loudly when interpret=False had no compiled
+    Pallas target; the shims must preserve that, not silently interpret."""
+    import jax
+
+    from repro.kernels import ops
+
+    if jax.default_backend() == "tpu":
+        pytest.skip("compiled path exists on TPU")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        with pytest.raises(Exception, match="[Ii]nterpret"):
+            ops.matmul(_arr((32, 32)), _arr((32, 32)), interpret=False)
+
+
+def test_probe_use_pallas_warns_deprecation():
+    from repro.core import probes
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        res = probes.probe_matmul_throughput(sizes=(32,), use_pallas=False)
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    assert res.meta["backend"] == "xla"
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)  # backend= is clean
+        res = probes.probe_matmul_throughput(sizes=(32,), backend="xla")
+    assert res.meta["backend"] == "xla"
+
+
+# ---------------------------------------------------------------------------
+# model integration
+# ---------------------------------------------------------------------------
+def test_mamba_pallas_impl_matches_xla():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models.mamba import mamba_forward, mamba_init
+
+    cfg = get_config("zamba2-7b").reduced()
+    p = mamba_init(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (1, 24, cfg.d_model), jnp.float32)
+    y_xla = mamba_forward(p, x, cfg.replace(ssm_impl="xla"))
+    y_pal = mamba_forward(p, x, cfg.replace(ssm_impl="pallas"))
+    np.testing.assert_allclose(np.asarray(y_xla), np.asarray(y_pal), rtol=2e-3, atol=2e-3)
+
+
+def test_attention_pallas_impl_matches_blockwise():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models.attention import attn_init, qkv_proj
+    from repro.models import attention as attn
+
+    cfg = get_config("zamba2-7b").reduced()
+    p = attn_init(jax.random.key(2), cfg)
+    x = jax.random.normal(jax.random.key(3), (1, 32, cfg.d_model), jnp.float32)
+    q, k, v = qkv_proj(p, x, cfg)
+    y_block = attn.blockwise_attention(q, k, v, causal=True, chunk=16)
+    y_pal = attn.pallas_attention(q, k, v, causal=True, chunk=16)
+    np.testing.assert_allclose(np.asarray(y_block), np.asarray(y_pal), rtol=2e-3, atol=2e-3)

@@ -1,36 +1,55 @@
 """Batched serving example: continuous batching over more requests than
-slots, on a reduced gemma config.
+slots on a reduced gemma config, with a streamed (per-token callback)
+request, a priority scheduler, and the engine's serving metrics.
 
     PYTHONPATH=src python examples/serve_batch.py
 """
-import time
-
 import jax
 import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serve import ServeEngine
+from repro.serve import EngineConfig, PriorityScheduler, ServeEngine
 
 
 def main():
     cfg = get_config("gemma-2b").reduced()
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
-    engine = ServeEngine(model, params, n_slots=4, max_len=96)
+    engine = ServeEngine(
+        model,
+        params,
+        EngineConfig(n_slots=4, max_len=96, prefill_chunk=8),
+        scheduler=PriorityScheduler(),
+    )
 
     rng = np.random.default_rng(0)
-    t0 = time.perf_counter()
     for i in range(10):
         prompt = list(rng.integers(1, cfg.vocab_size, 4 + i % 5))
-        engine.submit(prompt, max_new_tokens=8 + i % 7)
+        engine.submit(prompt, max_new_tokens=8 + i % 7, priority=i % 3)
+
+    # a streamed request: tokens arrive through the callback as they decode
+    streamed = []
+    engine.submit(
+        list(rng.integers(1, cfg.vocab_size, 6)),
+        max_new_tokens=10,
+        priority=5,  # jumps the queue under PriorityScheduler
+        on_token=lambda sess, tok: streamed.append(tok),
+    )
+
     finished = engine.run()
-    dt = time.perf_counter() - t0
-    tokens = sum(len(r.out) for r in finished)
-    print(f"served {len(finished)} requests / {tokens} tokens in {dt:.2f}s "
-          f"({tokens / dt:.1f} tok/s on CPU interpret path)")
-    for r in finished:
-        print(f"  req {r.rid}: prompt[{len(r.prompt)}] -> {r.out}")
+    s = engine.summary()
+    print(
+        f"served {len(finished)} requests / {s['generated_tokens']} tokens "
+        f"in {s['total_s']:.2f}s ({s['throughput_tok_s']:.1f} tok/s, "
+        f"ttft {s['ttft_ms_mean']:.0f}ms, occupancy {s['occupancy']:.0%})"
+    )
+    print(f"streamed request got {len(streamed)} tokens via callback: {streamed}")
+    for sess in finished:
+        print(
+            f"  req {sess.rid} prio {sess.priority} [{sess.finish_reason}]: "
+            f"prompt[{len(sess.prompt)}] -> {sess.out}"
+        )
 
 
 if __name__ == "__main__":

@@ -13,6 +13,7 @@ Paper map (table/figure -> registered name):
     Fig 4.2 / Tab 4.3  gemm        matmul throughput across dtypes
     Fig 4.3-4.5        throttle    power/thermal clock governor
     Ch. 3+4 (whole)    dissect     probe suite -> fitted HardwareModel
+    Ch. 1 + Fig 4.3    serving     engine TTFT/latency/throughput sweep
 """
 from . import (  # noqa: F401  (import side effect: registration)
     atomics,
@@ -23,5 +24,6 @@ from . import (  # noqa: F401  (import side effect: registration)
     instr,
     memhier,
     scheduler,
+    serving,
     throttle,
 )

@@ -56,3 +56,32 @@ def bench_bandwidth(min_pow=18, max_pow=24, block_footprint=1 << 22) -> list:
                 )
             )
     return recs
+
+
+@register(
+    "bandwidth",
+    backends=("pallas", "xla"),
+    paper_ref="Tab 3.2/3.4, Fig 3.12/3.13",
+    description="streaming bandwidth through the kernel dispatch API",
+    quick={"min_pow": 18, "max_pow": 21},
+    full={"min_pow": 18, "max_pow": 25},
+)
+def bench_bandwidth_backend(min_pow=18, max_pow=21, backend="xla") -> list:
+    """The same streaming-reduce measurement once per kernel backend —
+    ``bandwidth[pallas]`` vs ``bandwidth[xla]`` restates the paper's
+    hand-kernel-vs-library bandwidth columns on one results file."""
+    res = probes.probe_stream_bandwidth(
+        [1 << p for p in range(min_pow, max_pow)], backend=backend
+    )
+    return [
+        BenchRecord(
+            name=f"streambw_dispatch_{f >> 10}KiB",
+            benchmark="bandwidth",
+            x=f,
+            value=bw,
+            unit="GB/s",
+            metrics={"us_per_call": f / (bw * 1e9) * 1e6},
+            info=f"{backend} backend",
+        )
+        for f, bw in zip(res.x, res.y)
+    ]

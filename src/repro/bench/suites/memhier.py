@@ -63,3 +63,31 @@ def bench_memhier(min_pow=12, max_pow=25, steps=1 << 14) -> list:
             )
         )
     return recs
+
+
+@register(
+    "memhier",
+    backends=("pallas", "xla"),
+    paper_ref="Fig 3.5 / Tab 3.1",
+    description="pointer-chase latency through the kernel dispatch API",
+    quick={"min_pow": 12, "max_pow": 16, "steps": 1 << 12},
+    full={"min_pow": 12, "max_pow": 22, "steps": 1 << 14},
+)
+def bench_memhier_backend(min_pow=12, max_pow=16, steps=1 << 12, backend="xla") -> list:
+    """The dependent-load walk once per kernel backend — the paper's
+    fine-grained-pchase-vs-library contrast (§3.1) as ``memhier[pallas]`` vs
+    ``memhier[xla]`` rows in one results file."""
+    sizes = [1 << p for p in range(min_pow, max_pow)]
+    res = probes.probe_pointer_chase(sizes, steps=steps, backend=backend)
+    return [
+        BenchRecord(
+            name=f"pchase_dispatch_{s >> 10}KiB",
+            benchmark="memhier",
+            x=s,
+            value=lat,
+            unit="ns/load",
+            metrics={"us_per_call": lat * 1e-3},
+            info=f"{backend} backend",
+        )
+        for s, lat in zip(res.x, res.y)
+    ]

@@ -36,3 +36,33 @@ def bench_scheduler(rows_per_program=64, programs=(1, 2, 3, 4, 6, 8)) -> list:
         )
         for p, bw in zip(res.x, res.y)
     ]
+
+
+@register(
+    "scheduler",
+    backends=("pallas", "xla"),
+    paper_ref="Tab 2.1",
+    description="grid occupancy through the kernel dispatch API",
+    quick={"rows_per_program": 32, "programs": (1, 2, 4)},
+    full={"rows_per_program": 256, "programs": (1, 2, 3, 4, 6, 8)},
+)
+def bench_scheduler_backend(rows_per_program=32, programs=(1, 2, 4), backend="xla") -> list:
+    """Occupancy sweep once per kernel backend: the Pallas grid is the
+    work-unit axis under study; the XLA rows are the fused-library baseline
+    with no grid at all — the Tab 2.1 contrast as a results-file diff."""
+    res = probes.probe_grid_occupancy(
+        rows_per_program=rows_per_program, programs=programs, backend=backend
+    )
+    base = res.y[0] or 1.0
+    return [
+        BenchRecord(
+            name=f"grid_occupancy_dispatch_p{p}",
+            benchmark="scheduler",
+            x=p,
+            value=bw,
+            unit="GB/s",
+            metrics={"ratio_vs_1program": bw / base},
+            info=f"{backend} backend, {bw / base:.2f}x of 1-program",
+        )
+        for p, bw in zip(res.x, res.y)
+    ]

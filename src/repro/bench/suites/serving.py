@@ -1,0 +1,100 @@
+"""Serving hot-path benchmark — the paper's sustained-load methodology
+applied to the engine itself.
+
+The T4 is an inference board and the paper's recipe is measuring the *same*
+workload under steady load across hardware paths; this suite restates that
+for the serving stack: one engine definition driven over slot-count ×
+prompt-length × output-length sweeps, registered once per kernel backend
+(``serving[pallas]`` / ``serving[xla]``), emitting TTFT, per-token latency
+percentiles, throughput, and slot occupancy as schema-v1 records.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core.registry import register
+
+
+def _build_model():
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    # The decode/chunk-prefill hot path is jnp today, so the per-variant
+    # kernel policy exercises the dispatch scoping (and any kernel-routed
+    # model internals a config selects) rather than distinct decode kernels;
+    # the two variants bound the engine's dispatch overhead against each other.
+    cfg = get_config("gemma-2b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _drive(cfg, model, params, *, backend, n_slots, prompt_len, out_len,
+           requests, prefill_chunk, scheduler, seed=0):
+    """One measured engine run.  Warm-up requests go through the SAME engine
+    (its compiled steps are per-engine closures, so a throwaway engine would
+    not pre-compile anything) and their telemetry is discarded before the
+    measured batch."""
+    from repro.serve import EngineConfig, ServeEngine
+
+    engine = ServeEngine(
+        model,
+        params,
+        EngineConfig(
+            n_slots=n_slots,
+            max_len=prompt_len + out_len + 1,
+            prefill_chunk=prefill_chunk,
+            backend=backend,
+            scheduler=scheduler,
+        ),
+    )
+    rng = np.random.default_rng(seed)
+
+    def batch(n):
+        for _ in range(n):
+            prompt = [int(t) for t in rng.integers(1, cfg.vocab_size, prompt_len)]
+            engine.submit(prompt, max_new_tokens=out_len)
+        finished = engine.run(max_ticks=50 * max(n, 1) * out_len)
+        if len(finished) != n:
+            raise RuntimeError(f"served {len(finished)}/{n} requests")
+
+    batch(min(2, requests))  # warm-up: compile prefill-chunk + decode steps
+    engine.reset_metrics()
+    batch(requests)
+    return engine
+
+
+@register(
+    "serving",
+    backends=("pallas", "xla"),
+    paper_ref="Ch.1 + Fig 4.3 (inference board under sustained load)",
+    description="serving-engine TTFT/latency/throughput sweep",
+    quick={"slots": (2,), "prompt_lens": (8,), "out_lens": (8,), "requests": 4,
+           "prefill_chunk": 4},
+    full={"slots": (2, 4), "prompt_lens": (8, 32), "out_lens": (16,), "requests": 12,
+          "prefill_chunk": 8},
+)
+def bench_serving(slots=(2,), prompt_lens=(8,), out_lens=(8,), requests=4,
+                  prefill_chunk=4, scheduler="fcfs", backend="xla") -> list:
+    """Each sweep point drives a fresh engine over seeded prompts and reports
+    its :class:`~repro.serve.metrics.EngineMetrics` rows.  A warm-up pass per
+    point keeps one-time compilation out of TTFT."""
+    cfg, model, params = _build_model()
+    recs = []
+    for ns in slots:
+        for pl in prompt_lens:
+            for ol in out_lens:
+                engine = _drive(
+                    cfg, model, params, backend=backend, n_slots=ns,
+                    prompt_len=pl, out_len=ol, prefill_chunk=prefill_chunk,
+                    scheduler=scheduler, requests=requests,
+                )
+                recs.extend(
+                    engine.metrics.to_records(
+                        benchmark="serving",
+                        prefix=f"serving_s{ns}_p{pl}_o{ol}",
+                        x=f"s{ns}:p{pl}:o{ol}",
+                    )
+                )
+    return recs

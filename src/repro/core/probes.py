@@ -9,12 +9,10 @@ methodology).  Model mode predicts TPU v5e numbers from the HardwareModel
 Probes that exercise a kernel take a ``backend`` argument routed through
 :mod:`repro.kernels.api` ("pallas" | "interpret" | "xla"), so one probe
 definition measures every hardware path side by side — the paper's
-same-op-different-path recipe.  The old ``use_pallas`` booleans remain as
-deprecated aliases.
+same-op-different-path recipe.
 """
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass
 from typing import Callable, Optional, Sequence
 
@@ -37,22 +35,9 @@ class ProbeResult:
     meta: dict
 
 
-_UNSET = object()  # sentinel: distinguishes an explicit use_pallas=False
-
-
-def _pick_backend(backend: Optional[str], use_pallas=_UNSET, default: str = "xla") -> str:
-    """Resolve the probe's kernel path: explicit ``backend`` kwarg > the
-    deprecated ``use_pallas`` boolean (True -> "pallas", which
-    auto-interprets off-TPU) > an ambient ``kernel_policy`` backend > the
-    probe's own ``default``."""
-    if use_pallas is not _UNSET:
-        warnings.warn(
-            "use_pallas= is deprecated; pass backend='pallas'|'interpret'|'xla'",
-            DeprecationWarning,
-            stacklevel=3,
-        )
-        if backend is None:
-            return "pallas" if use_pallas else "xla"
+def _pick_backend(backend: Optional[str], default: str = "xla") -> str:
+    """Resolve the probe's kernel path: explicit ``backend`` kwarg > an
+    ambient ``kernel_policy`` backend > the probe's own ``default``."""
     if backend is not None:
         return backend
     return api.current_policy().backend or default
@@ -66,14 +51,13 @@ def probe_pointer_chase(
     steps: int = 1 << 16,
     seed: int = 0,
     backend: Optional[str] = None,
-    use_pallas=_UNSET,
 ) -> ProbeResult:
     """Dependent-load latency (ns/load) vs. footprint.
 
     The ``xla`` backend times a jitted fori_loop walk (minimal dispatch
     overhead); the Pallas backends time the kernel (identical semantics).
     """
-    be = _pick_backend(backend, use_pallas)
+    be = _pick_backend(backend)
     if not sizes_bytes:
         sizes_bytes = [1 << p for p in range(12, 27)]  # 4 KiB .. 64 MiB
     lats = []
@@ -101,10 +85,10 @@ def analyze_pointer_chase(res: ProbeResult, rel_jump: float = 0.35):
 def probe_stream_bandwidth(
     footprints: Sequence[int] = (),
     block_cols: int = 512,
+    # interpret-mode grids are Python loops: XLA default for wall-clock
     backend: Optional[str] = None,
-    use_pallas=_UNSET,  # interpret-mode grids are Python loops: XLA path for wall-clock
 ) -> ProbeResult:
-    be = _pick_backend(backend, use_pallas)
+    be = _pick_backend(backend)
     if not footprints:
         footprints = [1 << p for p in range(16, 28)]  # 64 KiB .. 256 MiB
     bws = []
@@ -225,9 +209,8 @@ def probe_matmul_throughput(
     sizes: Sequence[int] = (256, 512, 1024, 2048),
     dtypes: Sequence[str] = ("float32",),
     backend: Optional[str] = None,
-    use_pallas=_UNSET,
 ) -> ProbeResult:
-    be = _pick_backend(backend, use_pallas)
+    be = _pick_backend(backend)
     recs, keys = [], []
     int8_rows = []
     for dt in dtypes:

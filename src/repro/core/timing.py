@@ -22,6 +22,18 @@ class Timing:
         return self.median_s * 1e6
 
 
+def percentile(samples, q: float) -> float:
+    """Linear-interpolated percentile (``q`` in [0, 100]) of a sample
+    sequence; NaN on empty input.  Shared by the serving metrics and any
+    harness that reports latency distributions."""
+    samples = list(samples)
+    if not samples:
+        return float("nan")
+    import numpy as np
+
+    return float(np.percentile(samples, q))
+
+
 def time_fn(fn: Callable, *args, warmup: int = 3, reps: int = 10, **kw) -> Timing:
     """Times ``fn(*args, **kw)``; fn must return jax arrays (blocked on)."""
     for _ in range(warmup):

@@ -17,5 +17,4 @@ VALIDATED against the pure-jnp oracles in ``ref.py``.
 backends — ``pallas`` (native path), ``interpret`` (forced interpret mode),
 and ``xla`` (the ref.py oracle) — and dispatch is governed by the
 context-local ``kernel_policy`` (backend selection, autotuned tiles).
-``ops.py`` holds the deprecated pre-dispatch shims.
 """

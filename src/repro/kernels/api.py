@@ -29,8 +29,6 @@ reproduction that axis as a first-class API:
   ``choose_attention_chunk``, ``choose_ssm_chunk``) and memoized in the
   persisted :class:`repro.core.tuning.TuningCache` keyed on
   ``(op, shapes, dtype, backend)``.
-
-``repro.kernels.ops`` remains as thin deprecated shims over this module.
 """
 from __future__ import annotations
 

@@ -1,19 +1,18 @@
-"""Serving driver: batched requests through the continuous-batching engine.
+"""Serving driver: batched requests through the pluggable serving engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b --reduced \
-        --requests 6 --max-new 16
+        --requests 6 --max-new 16 --scheduler priority --backend xla
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serve import ServeEngine
+from repro.serve import SCHEDULERS, EngineConfig, ServeEngine
 
 
 def main(argv=None):
@@ -22,6 +21,10 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--scheduler", choices=sorted(SCHEDULERS), default="fcfs")
+    ap.add_argument("--backend", choices=("pallas", "interpret", "xla"), default=None,
+                    help="kernel_policy backend for the engine's compiled steps")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
@@ -31,26 +34,50 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    if cfg.family == "encdec":
-        raise SystemExit("serve driver targets decoder-only archs; whisper uses examples/")
 
     model = build_model(cfg)
+    if model.decode_chunk is None:
+        raise SystemExit(
+            f"serve driver targets attention-cache archs (dense/moe/vlm); "
+            f"{args.arch} is family {cfg.family!r}"
+        )
     params = model.init(jax.random.key(args.seed))
-    engine = ServeEngine(model, params, n_slots=args.slots, max_len=args.max_len)
+    engine = ServeEngine(
+        model,
+        params,
+        EngineConfig(
+            n_slots=args.slots,
+            max_len=args.max_len,
+            prefill_chunk=args.prefill_chunk,
+            backend=args.backend,
+            scheduler=args.scheduler,
+        ),
+    )
 
     rng = np.random.default_rng(args.seed)
-    t0 = time.perf_counter()
-    reqs = [
-        engine.submit(list(rng.integers(1, cfg.vocab_size, args.prompt_len)), args.max_new)
-        for _ in range(args.requests)
+    sessions = [
+        engine.submit(
+            list(rng.integers(1, cfg.vocab_size, args.prompt_len)),
+            args.max_new,
+            priority=i % 3,  # exercise the priority axis under --scheduler priority
+        )
+        for i in range(args.requests)
     ]
     finished = engine.run()
-    dt = time.perf_counter() - t0
-    tokens = sum(len(r.out) for r in finished)
-    print(f"served {len(finished)}/{len(reqs)} requests, {tokens} tokens in {dt:.2f}s "
-          f"({tokens/dt:.1f} tok/s)")
-    for r in finished[:4]:
-        print(f"  req {r.rid}: {r.out[:10]}{'...' if len(r.out) > 10 else ''}")
+    s = engine.summary()
+    print(
+        f"served {len(finished)}/{len(sessions)} requests, "
+        f"{s['generated_tokens']} tokens in {s['total_s']:.2f}s "
+        f"({s['throughput_tok_s']:.1f} tok/s, prefill {s['prefill_tok_s']:.1f} tok/s)"
+    )
+    print(
+        f"ttft {s['ttft_ms_mean']:.1f}ms mean / {s['ttft_ms_p95']:.1f}ms p95; "
+        f"per-token p50 {s['tok_latency_ms_p50']:.2f}ms p95 "
+        f"{s['tok_latency_ms_p95']:.2f}ms; occupancy {s['occupancy']:.0%}"
+    )
+    for sess in finished[:4]:
+        print(f"  req {sess.rid} [{sess.finish_reason}]: "
+              f"{sess.out[:10]}{'...' if len(sess.out) > 10 else ''}")
     return finished
 
 

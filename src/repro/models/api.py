@@ -5,6 +5,9 @@
   - ``loss_fn(params, batch)``          -> scalar loss        (train cells)
   - ``prefill(params, batch)``          -> (logits, cache)    (prefill cells)
   - ``decode_step(params, cache, tokens, pos)`` -> (logits, cache) (decode cells)
+  - ``decode_chunk(params, cache, tokens (B,C), positions (B,C))``
+    -> (logits (B,C,V), cache) — C decode steps fused into one compiled call
+    (chunked batched prefill); None for recurrent families
   - ``init_cache/cache_specs(batch, max_len)``
 and ``input_specs(cfg, shape)`` builds ShapeDtypeStruct stand-ins for every
 input of the step function a given shape cell lowers (dry-run: zero
@@ -36,6 +39,12 @@ class ModelApi:
     decode_step: Callable
     init_cache: Callable
     cache_specs: Callable
+    # Chunked batched decode/prefill: (params, cache, tokens (B,C), positions
+    # (B,C)) -> (logits (B,C,V), cache).  C decode_step-equivalent steps in one
+    # compiled call; positions == cache_len marks pad entries (no write, row
+    # ignored).  None for families whose per-lane state cannot yet advance
+    # independently inside a shared batch (recurrent ssm/hybrid caches).
+    decode_chunk: Optional[Callable] = None
 
 
 def _cache_dtype(cfg):
@@ -61,6 +70,9 @@ def build_model(cfg: ModelConfig) -> ModelApi:
         def decode_step(params, cache, tokens, pos):
             return transformer.lm_decode_step(params, cache, tokens, pos, cfg)
 
+        def decode_chunk(params, cache, tokens, positions):
+            return transformer.lm_decode_chunk(params, cache, tokens, positions, cfg)
+
         def cache_specs(batch, max_len):
             return attn.cache_specs(cfg, batch, max_len, cfg.n_layers, _cache_dtype(cfg))
 
@@ -75,6 +87,7 @@ def build_model(cfg: ModelConfig) -> ModelApi:
             decode_step,
             init_cache,
             cache_specs,
+            decode_chunk=decode_chunk,
         )
 
     if fam == "ssm":  # xlstm

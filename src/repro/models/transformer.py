@@ -245,6 +245,98 @@ def lm_prefill(params: Params, tokens: jax.Array, cfg, max_len: int, frontend=No
     return last, cache
 
 
+def _chunk_attention(q, cache_k, cache_v, positions, cfg):
+    """Chunk queries against the full KV cache with per-(lane, query) masks.
+
+    q (B,C,H,hd); cache_k/v (B,Smax,K,hd); positions (B,C) — key index t is
+    visible to query c of lane b iff t <= positions[b, c].  Pad queries
+    (positions == Smax) see everything and produce garbage the caller drops.
+    """
+    b, c, h, hd = q.shape
+    kh = cache_k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, c, kh, g, hd).astype(jnp.float32)
+    scale = hd**-0.5
+    s = jnp.einsum("bckgd,btkd->bckgt", qg, cache_k.astype(jnp.float32)) * scale
+    smax = cache_k.shape[1]
+    mask = jnp.arange(smax)[None, None, :] <= positions[:, :, None]  # (B,C,Smax)
+    s = jnp.where(mask[:, :, None, None, :], s, attn.NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    o = jnp.einsum("bckgt,btkd->bckgd", p, cache_v.astype(jnp.float32))
+    o = o / jnp.maximum(p.sum(-1)[..., None], 1e-30)
+    return o.reshape(b, c, h, hd).astype(q.dtype)
+
+
+def _block_decode_chunk(cfg, p: Params, x: jax.Array, ck, cv, positions):
+    """Chunked decode block: C new tokens per lane against one cache lane.
+
+    x (B,C,d); ck/cv (B,Smax,K,hd); positions (B,C).  Writes the chunk's KV
+    into the cache first (mask-select, no scatter), then attends — intra-chunk
+    causality falls out of the t <= positions mask because every chunk key
+    already sits in the cache at its own position.
+    """
+    xin = rmsnorm(p["attn_norm"], x, cfg.norm_eps)
+    q, k, v = attn.qkv_proj(p["attn"], xin, cfg)
+    from .common import apply_rope
+
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    smax = ck.shape[1]
+    onehot = positions[:, :, None] == jnp.arange(smax, dtype=jnp.int32)[None, None, :]
+    write = onehot.any(axis=1)[:, :, None, None]  # (B,Smax,1,1)
+    k_new = jnp.einsum("bct,bckd->btkd", onehot.astype(ck.dtype), k.astype(ck.dtype))
+    v_new = jnp.einsum("bct,bckd->btkd", onehot.astype(cv.dtype), v.astype(cv.dtype))
+    ck = jnp.where(write, k_new, ck)
+    cv = jnp.where(write, v_new, cv)
+    o = _chunk_attention(q, ck, cv, positions, cfg)
+    x = x + attn.out_proj(p["attn"], o, x.dtype)
+    xin = rmsnorm(p["mlp_norm"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        y, _ = mlps.moe_block(p["moe"], xin, cfg)
+    else:
+        y = mlps.mlp(p["mlp"], xin, cfg)
+    x = x + y
+    x = shard_act(x, "dp", None, None)
+    return x, ck, cv
+
+
+def lm_decode_chunk(params: Params, cache: dict, tokens: jax.Array, positions: jax.Array, cfg):
+    """Chunked batched prefill step: C tokens per lane in ONE compiled call.
+
+    tokens (B,C) int32; positions (B,C) int32 gives each token's cache index
+    in its own lane (lanes advance independently).  A position equal to Smax
+    is padding: nothing is written and that query's logits row is garbage the
+    caller ignores.  Returns (logits (B,C,V), cache) — exact continuation of
+    ``lm_decode_step`` semantics, C steps at a time.
+    """
+    dt = as_dtype(cfg.dtype)
+    x = params["embed"].astype(dt)[tokens]
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model**0.5, dt)
+    x = shard_act(x, "dp", None, None)
+
+    def step(x, inp):
+        lp, ck, cv = inp
+        x, ck, cv = _block_decode_chunk(cfg, shard_params(lp, cfg), x, ck, cv, positions)
+        return x, (ck, cv)
+
+    if cfg.scan_layers:
+        x, (ks, vs) = jax.lax.scan(step, x, (params["layers"], cache["k"], cache["v"]))
+    else:
+        ks_l, vs_l = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, (ck, cv) = step(x, (lp, cache["k"][i], cache["v"][i]))
+            ks_l.append(ck)
+            vs_l.append(cv)
+        ks, vs = jnp.stack(ks_l), jnp.stack(vs_l)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = lm_logits(params, x, cfg)
+    return logits, {"k": ks, "v": vs}
+
+
 def lm_decode_step(params: Params, cache: dict, tokens: jax.Array, pos: jax.Array, cfg):
     """One decode step.  tokens (B,) int32, pos (B,) int32 -> (logits (B,V), cache)."""
     dt = as_dtype(cfg.dtype)

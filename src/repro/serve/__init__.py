@@ -1,6 +1,37 @@
-"""Serving substrate: batched prefill/decode engine, sampler, batcher."""
-from .engine import ServeEngine
-from .sampler import greedy, temperature_sample
-from .batcher import Batcher, Request
+"""Serving substrate: pluggable batched engine.
 
-__all__ = ["ServeEngine", "greedy", "temperature_sample", "Batcher", "Request"]
+``ServeEngine`` + ``EngineConfig`` drive a fixed slot grid with one compiled
+decode step per tick and chunked batched prefill; admission order is a
+swappable ``Scheduler`` (FCFS / priority / static-batch, or user-supplied);
+``submit()`` returns a streaming ``Session`` handle; ``EngineMetrics`` emits
+schema-v1 serving records (TTFT, latency percentiles, throughput).
+"""
+from .engine import EngineConfig, ServeEngine
+from .metrics import EngineMetrics
+from .sampler import greedy, temperature_sample, top_k_sample
+from .scheduler import (
+    SCHEDULERS,
+    FCFSScheduler,
+    PriorityScheduler,
+    Scheduler,
+    StaticBatchScheduler,
+    make_scheduler,
+)
+from .session import RequestStats, Session
+
+__all__ = [
+    "SCHEDULERS",
+    "EngineConfig",
+    "EngineMetrics",
+    "FCFSScheduler",
+    "PriorityScheduler",
+    "RequestStats",
+    "Scheduler",
+    "ServeEngine",
+    "Session",
+    "StaticBatchScheduler",
+    "greedy",
+    "make_scheduler",
+    "temperature_sample",
+    "top_k_sample",
+]

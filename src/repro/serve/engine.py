@@ -1,90 +1,290 @@
-"""Batched serving engine: per-slot prefill + fused fixed-shape decode step.
+"""Pluggable batched serving engine.
 
-One compiled decode step serves all slots every tick; slot admission happens
-between ticks (continuous batching).  Per-slot prefill writes the new
-request's KV into the shared cache via the model's prefill path at the
-slot's batch index.
+One compiled fixed-shape decode step serves all slots every tick; admission
+between ticks is delegated to a swappable :class:`~repro.serve.scheduler.
+Scheduler`; prompt ingestion runs as *chunked batched prefill* — one compiled
+``ModelApi.decode_chunk`` call per chunk, shared across every slot admitted
+that tick — replacing the old per-token Python loop.  Every tick is measured
+into :class:`~repro.serve.metrics.EngineMetrics` and the compiled steps trace
+under the :class:`EngineConfig`'s kernel-policy backend, so one engine
+definition runs the pallas / interpret / xla paths side by side.
 """
 from __future__ import annotations
 
-from typing import Optional
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.kernels.api import BACKENDS, kernel_policy
 from repro.models.api import ModelApi
 
-from .batcher import Batcher, Request
+from .metrics import EngineMetrics
 from .sampler import greedy
+from .scheduler import Scheduler, make_scheduler
+from .session import (
+    ACTIVE,
+    FINISH_CANCELLED,
+    FINISH_EOS,
+    FINISH_MAX_LEN,
+    FINISH_MAX_NEW_TOKENS,
+    PREFILL,
+    Session,
+)
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Engine-level knobs, separated from the model definition.
+
+    ``backend``/``autotune`` scope a ``kernel_policy`` around the engine's
+    compiled steps (applied at trace time), so the same engine definition can
+    run every kernel path of a model whose config selects kernel-routed
+    implementations (``attn_impl="pallas"``, ``ssm_impl="pallas"``).
+    """
+
+    n_slots: int
+    max_len: int
+    prefill_chunk: int = 16  # tokens per compiled prefill step
+    backend: Optional[str] = None  # kernel_policy backend (None: ambient)
+    # kernel_policy autotune for engine steps (None: ambient; bool: forced)
+    autotune: Optional[bool] = None
+    eos_id: Optional[int] = None
+    sampler: Callable = greedy
+    scheduler: str = "fcfs"  # default policy when none is injected
+
+    def __post_init__(self):
+        if self.n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
+        if self.max_len < 2:
+            raise ValueError("max_len must be >= 2 (prompt + one generated token)")
+        if self.prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
+        if self.backend is not None and self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; expected {BACKENDS}")
 
 
 class ServeEngine:
-    def __init__(
-        self,
-        model: ModelApi,
-        params,
-        n_slots: int,
-        max_len: int,
-        sampler=greedy,
-        eos_id: Optional[int] = None,
-    ):
+    """Continuous-batching engine over a fixed slot grid.
+
+    ``scheduler`` accepts any :class:`Scheduler` implementation (defaults to
+    the config's named stock policy); ``submit`` returns a streaming
+    :class:`Session` handle with per-token callbacks, cancellation, and
+    request stats.
+    """
+
+    def __init__(self, model: ModelApi, params, config: EngineConfig,
+                 scheduler: Optional[Scheduler] = None):
+        if model.decode_chunk is None:
+            raise NotImplementedError(
+                f"family {model.cfg.family!r} has no decode_chunk: recurrent "
+                "per-lane state cannot yet advance independently inside a "
+                "shared batch; serving currently targets the attention-cache "
+                "families (dense/moe/vlm)"
+            )
         self.model = model
         self.params = params
-        self.max_len = max_len
-        self.sampler = sampler
-        self.eos_id = eos_id
-        self.batcher = Batcher(n_slots, max_len)
-        self.cache = model.init_cache(n_slots, max_len)
-        self.last_token = jnp.zeros((n_slots,), jnp.int32)
-        self.pos = jnp.zeros((n_slots,), jnp.int32)
-        self._decode = jax.jit(model.decode_step)
+        self.cfg = config
+        self.scheduler = scheduler if scheduler is not None else make_scheduler(config.scheduler)
+        if not isinstance(self.scheduler, Scheduler):
+            raise TypeError(
+                f"scheduler {type(self.scheduler).__name__} does not implement "
+                "the Scheduler protocol (submit/select/pending)"
+            )
+        self.metrics = EngineMetrics(config.n_slots)
+        self.slots: list = [None] * config.n_slots
+        self.finished: list = []
+        self.cache = model.init_cache(config.n_slots, config.max_len)
+        self.last_token = jnp.zeros((config.n_slots,), jnp.int32)
+        self.pos = jnp.zeros((config.n_slots,), jnp.int32)
+        self._lane_pos = [0] * config.n_slots  # host mirror: next cache index
+        self._decode = self._jit_scoped(model.decode_step)
+        self._chunk = self._jit_scoped(model.decode_chunk)
         self._rid = 0
 
     # ------------------------------------------------------------------
-    def submit(self, prompt: list[int], max_new_tokens: int) -> Request:
-        req = Request(self._rid, prompt, max_new_tokens)
+    def _jit_scoped(self, fn: Callable) -> Callable:
+        """jit ``fn`` so it traces under the config's kernel policy.
+
+        With a policy set, jit a per-engine closure (not ``fn`` itself):
+        jax's trace cache is keyed on function identity, not on the policy
+        contextvar, so jitting the shared ``model.decode_*`` directly would
+        let a second engine with a different backend silently reuse the
+        first engine's trace."""
+        if self.cfg.backend is None and self.cfg.autotune is None:
+            return jax.jit(fn)
+        backend, autotune = self.cfg.backend, self.cfg.autotune
+
+        def scoped(*args):  # fresh object per engine -> own trace cache
+            with kernel_policy(backend=backend, autotune=autotune):
+                return fn(*args)
+
+        return jax.jit(scoped)
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int, *, priority: int = 0,
+               on_token: Optional[Callable] = None) -> Session:
+        """Queue a request; returns its streaming :class:`Session` handle."""
+        prompt = [int(t) for t in prompt]
+        if not prompt:
+            raise ValueError("empty prompt")
+        if len(prompt) >= self.cfg.max_len:
+            raise ValueError(
+                f"prompt length {len(prompt)} must be < max_len "
+                f"{self.cfg.max_len} (no room to generate)"
+            )
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        session = Session(self._rid, prompt, max_new_tokens,
+                          priority=priority, on_token=on_token)
+        session.stats.submitted_at = time.perf_counter()
+        session._on_queued_cancel = self._record_queued_cancel
         self._rid += 1
-        self.batcher.submit(req)
-        return req
+        self.scheduler.submit(session)
+        return session
+
+    def _record_queued_cancel(self, session: Session) -> None:
+        """Queued-cancel accounting: the session never occupies a slot, but
+        it must still show up in metrics and the finished list."""
+        self.metrics.record_finished(session)
+        self.finished.append(session)
+
+    def cancel(self, session: Session) -> None:
+        """Alias for ``session.cancel()`` (kept for symmetry with submit)."""
+        session.cancel()
 
     # ------------------------------------------------------------------
-    def _prefill_slot(self, slot: int, req: Request):
-        """Run the prompt through the model one token at a time into this
-        slot's cache lane (simple + exact; a production engine would batch
-        prefill separately)."""
-        toks = jnp.asarray(req.prompt, jnp.int32)
-        for t in range(len(req.prompt)):
-            tok = self.last_token.at[slot].set(toks[t])
-            pos = self.pos.at[slot].set(t)
-            logits, self.cache = self._decode(self.params, self.cache, tok, pos)
-        self.last_token = self.last_token.at[slot].set(
-            self.sampler(logits[slot])
-            if logits.ndim == 1
-            else self.sampler(logits)[slot]
+    def _finalize(self, lane: int, session: Session, reason: str) -> None:
+        session._finish(reason)
+        self.metrics.record_finished(session)
+        self.finished.append(session)
+        self.slots[lane] = None
+
+    def _finish_reason(self, lane: int, session: Session, token: int) -> str:
+        if self.cfg.eos_id is not None and token == self.cfg.eos_id:
+            return FINISH_EOS
+        if len(session.out) >= session.max_new_tokens:
+            return FINISH_MAX_NEW_TOKENS
+        if self._lane_pos[lane] >= self.cfg.max_len:
+            return FINISH_MAX_LEN  # cache exhausted: nowhere to write the next KV
+        return ""
+
+    def _release_cancelled(self) -> None:
+        for i, s in enumerate(self.slots):
+            if s is not None and s.cancel_requested:
+                self._finalize(i, s, FINISH_CANCELLED)
+
+    def _admit(self) -> list:
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not free:
+            return []
+        picked = self.scheduler.select(len(free), self.cfg.n_slots)
+        if len(picked) > len(free):
+            raise RuntimeError(
+                f"scheduler returned {len(picked)} sessions for {len(free)} free slots"
+            )
+        now = time.perf_counter()
+        assignments = []
+        for lane, session in zip(free, picked):
+            session.status = PREFILL
+            session.stats.admitted_at = now
+            self.slots[lane] = session
+            assignments.append((lane, session))
+        return assignments
+
+    # ------------------------------------------------------------------
+    def _prefill(self, assignments: list) -> None:
+        """Chunked batched prefill: every admitted prompt advances through
+        the same compiled ``decode_chunk`` call, ``prefill_chunk`` tokens per
+        step.  Lanes not being prefilled carry the pad position (== max_len),
+        which writes nothing — mid-generation neighbours are untouched."""
+        t0 = time.perf_counter()
+        n_slots, ml, chunk = self.cfg.n_slots, self.cfg.max_len, self.cfg.prefill_chunk
+        longest = max(len(s.prompt) for _, s in assignments)
+        n_chunks = -(-longest // chunk)
+        toks = np.zeros((n_slots, n_chunks * chunk), np.int32)
+        poss = np.full((n_slots, n_chunks * chunk), ml, np.int32)
+        for lane, s in assignments:
+            ln = len(s.prompt)
+            toks[lane, :ln] = s.prompt
+            poss[lane, :ln] = np.arange(ln, dtype=np.int32)
+        for c in range(n_chunks):
+            sl = slice(c * chunk, (c + 1) * chunk)
+            logits, self.cache = self._chunk(
+                self.params, self.cache, jnp.asarray(toks[:, sl]), jnp.asarray(poss[:, sl])
+            )
+            ending = [
+                (lane, s) for lane, s in assignments
+                if c * chunk < len(s.prompt) <= (c + 1) * chunk
+            ]
+            for lane, s in ending:
+                row = logits[lane, len(s.prompt) - 1 - c * chunk]
+                tok = int(self.cfg.sampler(row))
+                s.status = ACTIVE
+                self.last_token = self.last_token.at[lane].set(tok)
+                self.pos = self.pos.at[lane].set(len(s.prompt))
+                self._lane_pos[lane] = len(s.prompt)
+                s._record_token(tok)  # TTFT stamps here
+                reason = self._finish_reason(lane, s, tok)
+                if reason:
+                    self._finalize(lane, s, reason)
+        self.metrics.record_prefill(
+            time.perf_counter() - t0,
+            sum(len(s.prompt) for _, s in assignments),
+            len(assignments),
         )
-        self.pos = self.pos.at[slot].set(len(req.prompt))
-        req.out.append(int(self.last_token[slot]))
 
     # ------------------------------------------------------------------
-    def step(self):
-        """One engine tick: admit, decode, record."""
-        for slot, req in self.batcher.admit():
-            self._prefill_slot(slot, req)
-        active = self.batcher.active()
+    def step(self) -> None:
+        """One engine tick: release cancellations, admit + prefill, decode."""
+        self._release_cancelled()
+        admitted = self._admit()
+        if admitted:
+            self._prefill(admitted)
+        active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return
+        t0 = time.perf_counter()
         logits, self.cache = self._decode(
             self.params, self.cache, self.last_token, self.pos
         )
-        next_tok = self.sampler(logits)
+        next_tok = self.cfg.sampler(logits)
+        jax.block_until_ready(next_tok)
+        t_decode = time.perf_counter() - t0
         self.last_token = next_tok
         self.pos = self.pos + 1
-        for slot in active:
-            self.batcher.record_token(slot, int(next_tok[slot]), self.eos_id)
+        toks = np.asarray(next_tok)
+        for i in active:
+            s = self.slots[i]
+            self._lane_pos[i] += 1
+            s._record_token(int(toks[i]))
+            reason = self._finish_reason(i, s, int(toks[i]))
+            if reason:
+                self._finalize(i, s, reason)
+        self.metrics.record_tick(time.perf_counter() - t0, t_decode, len(active))
 
-    def run(self, max_ticks: int = 10_000) -> list[Request]:
+    # ------------------------------------------------------------------
+    def has_work(self) -> bool:
+        return any(s is not None for s in self.slots) or self.scheduler.pending() > 0
+
+    def run(self, max_ticks: int = 10_000) -> list:
+        """Drive until drained (or ``max_ticks``); returns finished sessions
+        (cancelled ones included, ``finish_reason == "cancelled"``)."""
         ticks = 0
-        while not self.batcher.idle() and ticks < max_ticks:
+        while self.has_work() and ticks < max_ticks:
             self.step()
             ticks += 1
-        return self.batcher.finished
+        return self.finished
+
+    def summary(self) -> dict:
+        return self.metrics.summary()
+
+    def reset_metrics(self) -> None:
+        """Discard accumulated telemetry and the finished list (keeps the
+        compiled steps warm) — call after a warm-up pass so one-time
+        compilation stays out of the measured TTFT/latency records."""
+        self.metrics = EngineMetrics(self.cfg.n_slots)
+        self.finished = []

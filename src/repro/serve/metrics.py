@@ -1,0 +1,143 @@
+"""Engine instrumentation: every tick is measured, every request traced.
+
+The engine feeds :class:`EngineMetrics` wall-clock samples (tick duration,
+prefill-chunk duration, slot occupancy) plus each finished session's
+:class:`~repro.serve.session.RequestStats`; ``summary()`` distills the
+paper-style sustained-load numbers (TTFT, per-token latency percentiles,
+throughput, occupancy) and ``to_records()`` emits them in the schema-v1
+record format the bench subsystem stores and gates.
+"""
+from __future__ import annotations
+
+from repro.core.timing import percentile
+
+from .session import Session
+
+
+class EngineMetrics:
+    """Accumulates one engine's serving telemetry."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.tick_s: list = []  # full step() wall-clock
+        self.decode_s: list = []  # decode-step portion of each tick
+        self.occupancy: list = []  # active slots at each decode tick
+        self.prefill_s: list = []  # per prefill flush (all chunks)
+        self.prefill_tokens = 0  # prompt tokens prefilled
+        self.prefill_requests = 0
+        self.ttft_s: list = []  # per finished request
+        self.token_latency_s: list = []  # inter-token gaps, pooled
+        self.generated_tokens = 0
+        self.finished = 0
+        self.cancelled = 0
+
+    # -- engine hooks ------------------------------------------------------
+    def record_tick(self, seconds: float, decode_seconds: float, n_active: int) -> None:
+        self.tick_s.append(seconds)
+        self.decode_s.append(decode_seconds)
+        self.occupancy.append(n_active)
+
+    def record_prefill(self, seconds: float, n_tokens: int, n_requests: int) -> None:
+        self.prefill_s.append(seconds)
+        self.prefill_tokens += n_tokens
+        self.prefill_requests += n_requests
+
+    def record_finished(self, session: Session) -> None:
+        if session.finish_reason == "cancelled":
+            self.cancelled += 1
+            return
+        self.finished += 1
+        self.generated_tokens += len(session.out)
+        if session.stats.ttft_s is not None:
+            self.ttft_s.append(session.stats.ttft_s)
+        self.token_latency_s.extend(session.stats.token_latencies_s)
+
+    # -- derived -----------------------------------------------------------
+    def summary(self) -> dict:
+        """Sustained-load summary; times in ms, rates in tokens/s."""
+        total_s = sum(self.tick_s) + sum(self.prefill_s)
+        n_t = len(self.ttft_s)
+        occ = (
+            sum(self.occupancy) / (len(self.occupancy) * self.n_slots)
+            if self.occupancy
+            else 0.0
+        )
+        return {
+            "requests": self.finished,
+            "cancelled": self.cancelled,
+            "generated_tokens": self.generated_tokens,
+            "prefill_tokens": self.prefill_tokens,
+            "ticks": len(self.tick_s),
+            "total_s": total_s,
+            "throughput_tok_s": self.generated_tokens / total_s if total_s else 0.0,
+            "prefill_tok_s": (
+                self.prefill_tokens / sum(self.prefill_s) if self.prefill_s else 0.0
+            ),
+            "ttft_ms_mean": (sum(self.ttft_s) / n_t * 1e3) if n_t else float("nan"),
+            "ttft_ms_p50": percentile(self.ttft_s, 50) * 1e3,
+            "ttft_ms_p95": percentile(self.ttft_s, 95) * 1e3,
+            "tok_latency_ms_p50": percentile(self.token_latency_s, 50) * 1e3,
+            "tok_latency_ms_p95": percentile(self.token_latency_s, 95) * 1e3,
+            "occupancy": occ,
+        }
+
+    def to_records(self, benchmark: str, prefix: str, x=None) -> list:
+        """Schema-v1 rows for one engine run: TTFT, per-token latency
+        percentiles, throughput, and slot occupancy."""
+        from repro.bench.schema import BenchRecord
+
+        s = self.summary()
+        shared = {
+            "requests": s["requests"],
+            "generated_tokens": s["generated_tokens"],
+            "ticks": s["ticks"],
+        }
+        return [
+            BenchRecord(
+                name=f"{prefix}_ttft",
+                benchmark=benchmark,
+                x=x,
+                value=s["ttft_ms_mean"],
+                unit="ms",
+                metrics={**shared, "p50": s["ttft_ms_p50"], "p95": s["ttft_ms_p95"]},
+                info="time to first token (queue + prefill + sample)",
+            ),
+            BenchRecord(
+                name=f"{prefix}_tok_latency_p50",
+                benchmark=benchmark,
+                x=x,
+                value=s["tok_latency_ms_p50"],
+                unit="ms",
+                metrics=shared,
+                info="median inter-token latency",
+            ),
+            BenchRecord(
+                name=f"{prefix}_tok_latency_p95",
+                benchmark=benchmark,
+                x=x,
+                value=s["tok_latency_ms_p95"],
+                unit="ms",
+                metrics=shared,
+                info="p95 inter-token latency",
+            ),
+            BenchRecord(
+                name=f"{prefix}_throughput",
+                benchmark=benchmark,
+                x=x,
+                value=s["throughput_tok_s"],
+                unit="tok/s",
+                better="higher",
+                metrics={**shared, "prefill_tok_s": s["prefill_tok_s"]},
+                info="generated tokens / engine wall-clock",
+            ),
+            BenchRecord(
+                name=f"{prefix}_occupancy",
+                benchmark=benchmark,
+                x=x,
+                value=s["occupancy"],
+                unit="frac",
+                better="info",
+                metrics=shared,
+                info=f"mean active slots / {self.n_slots}",
+            ),
+        ]

@@ -21,6 +21,14 @@ _SMOKE_OVERRIDES = {
     "atomics": {"n_updates": 1 << 12, "collisions": (1, 4)},
     "gemm": {"sizes": (128,)},
     "scheduler": {"rows_per_program": 16, "programs": (1, 2)},
+    # backend-parameterized variants (keyed by full variant name)
+    **{f"bandwidth[{b}]": {"min_pow": 18, "max_pow": 20} for b in ("pallas", "xla")},
+    **{f"memhier[{b}]": {"min_pow": 12, "max_pow": 14, "steps": 1 << 10}
+       for b in ("pallas", "xla")},
+    **{f"scheduler[{b}]": {"rows_per_program": 16, "programs": (1, 2)}
+       for b in ("pallas", "xla")},
+    **{f"serving[{b}]": {"requests": 2, "prompt_lens": (4,), "out_lens": (3,)}
+       for b in ("pallas", "xla")},
 }
 
 
@@ -56,7 +64,9 @@ def test_runner_select_filters_by_prefix():
 
 @pytest.mark.parametrize(
     "name",
-    ["atomics", "axpy", "bandwidth", "gemm", "instr", "memhier", "scheduler", "throttle"],
+    ["atomics", "axpy", "bandwidth", "gemm", "instr", "memhier", "scheduler", "throttle",
+     "bandwidth[pallas]", "bandwidth[xla]", "memhier[pallas]", "memhier[xla]",
+     "scheduler[pallas]", "scheduler[xla]", "serving[pallas]", "serving[xla]"],
 )
 def test_quick_mode_produces_valid_records(quick_records, name):
     recs = quick_records[name]

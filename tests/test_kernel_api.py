@@ -1,7 +1,5 @@
 """Unified kernel dispatch API: backend parity, policy semantics, autotune
-cache, registry backend variants, and the deprecated ``ops`` shims."""
-import warnings
-
+cache, and registry backend variants."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -334,60 +332,22 @@ def test_builtin_backend_variants_registered():
 
 
 # ---------------------------------------------------------------------------
-# deprecated ops shims
+# removed deprecation surface
 # ---------------------------------------------------------------------------
-def test_ops_shims_importable_warn_and_match():
-    from repro.kernels import ops
+def test_ops_shims_removed():
+    """`kernels.ops` and the probes' `use_pallas=` completed their
+    deprecation cycle in PR 3: both must be gone, not quietly resurrected."""
+    import inspect
 
-    a, b = _arr((64, 48), scale=0.3), _arr((48, 32), scale=0.3)
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        got = ops.matmul(a, b, bm=32, bk=16, bn=32)
-    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
-    np.testing.assert_allclose(
-        np.asarray(got), np.asarray(ref.matmul_ref(a, b)), rtol=1e-4, atol=1e-4
-    )
+    with pytest.raises(ImportError):
+        from repro.kernels import ops  # noqa: F401
 
-
-def test_ops_interpret_kwarg_maps_to_backend():
-    from repro.kernels import ops
-
-    x, y = _arr((8, 128)), _arr((8, 128))
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        got = ops.axpy(x, y, 2.0, block_cols=128, interpret=True)
-    np.testing.assert_allclose(
-        np.asarray(got), np.asarray(ref.axpy_ref(x, y, 2.0)), rtol=1e-5, atol=1e-5
-    )
-
-
-def test_ops_interpret_false_still_demands_compiled_path():
-    """The old wrappers failed loudly when interpret=False had no compiled
-    Pallas target; the shims must preserve that, not silently interpret."""
-    import jax
-
-    from repro.kernels import ops
-
-    if jax.default_backend() == "tpu":
-        pytest.skip("compiled path exists on TPU")
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        with pytest.raises(Exception, match="[Ii]nterpret"):
-            ops.matmul(_arr((32, 32)), _arr((32, 32)), interpret=False)
-
-
-def test_probe_use_pallas_warns_deprecation():
     from repro.core import probes
 
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        res = probes.probe_matmul_throughput(sizes=(32,), use_pallas=False)
-    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
-    assert res.meta["backend"] == "xla"
-    with warnings.catch_warnings():
-        warnings.simplefilter("error", DeprecationWarning)  # backend= is clean
-        res = probes.probe_matmul_throughput(sizes=(32,), backend="xla")
-    assert res.meta["backend"] == "xla"
+    for fn in (probes.probe_matmul_throughput, probes.probe_pointer_chase,
+               probes.probe_stream_bandwidth):
+        assert "use_pallas" not in inspect.signature(fn).parameters
+        assert "backend" in inspect.signature(fn).parameters
 
 
 # ---------------------------------------------------------------------------

@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 
 from repro.core.pchase import single_cycle_permutation
-from repro.kernels import ops, ref
+from repro.kernels import api, ref
 
 RNG = np.random.default_rng(42)
 
@@ -19,7 +19,7 @@ def _arr(shape, dtype=np.float32, scale=1.0):
 def test_axpy_sweep(shape, dtype):
     x, y = _arr(shape, dtype), _arr(shape, dtype)
     cols = min(shape[1], 512)
-    got = ops.axpy(x, y, 2.5, block_rows=8, block_cols=cols)
+    got = api.axpy(x, y, 2.5, block_rows=8, block_cols=cols)
     want = ref.axpy_ref(x, y, 2.5)
     tol = 1e-5 if dtype == np.float32 else 2e-2
     np.testing.assert_allclose(
@@ -30,16 +30,16 @@ def test_axpy_sweep(shape, dtype):
 @pytest.mark.parametrize("shape", [(8, 512), (64, 512), (256, 1024)])
 def test_stream_copy_reduce(shape):
     x = _arr(shape)
-    np.testing.assert_array_equal(np.asarray(ops.stream_copy(x)), np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(api.stream_copy(x)), np.asarray(x))
     np.testing.assert_allclose(
-        float(ops.stream_reduce(x)[0, 0]), float(ref.reduce_ref(x)[0, 0]), rtol=1e-4
+        float(api.stream_reduce(x)[0, 0]), float(ref.reduce_ref(x)[0, 0]), rtol=1e-4
     )
 
 
 @pytest.mark.parametrize("stride", [1, 2, 4, 8])
 def test_strided_reduce(stride):
     x = _arr((256, 128))
-    got = float(ops.strided_reduce(x, stride=stride)[0, 0])
+    got = float(api.strided_reduce(x, stride=stride)[0, 0])
     want = float(ref.strided_reduce_ref(x, stride)[0, 0])
     np.testing.assert_allclose(got, want, rtol=1e-4)
 
@@ -49,7 +49,7 @@ def test_strided_reduce(stride):
 @pytest.mark.parametrize("steps", [10, 777])
 def test_pchase_sweep(n, steps):
     perm = single_cycle_permutation(n, seed=n)
-    got = int(ops.pchase(jnp.asarray(perm), steps)[0, 0])
+    got = int(api.pchase(jnp.asarray(perm), steps)[0, 0])
     assert got == ref.pchase_ref(perm, steps)
 
 
@@ -61,7 +61,7 @@ def test_pchase_sweep(n, steps):
 def test_matmul_sweep(mkn, dtype):
     m, k, n = mkn
     a, b = _arr((m, k), dtype, 0.3), _arr((k, n), dtype, 0.3)
-    got = ops.matmul(a, b)
+    got = api.matmul(a, b)
     want = ref.matmul_ref(a, b)
     tol = 1e-4 if dtype == np.float32 else 3e-2
     np.testing.assert_allclose(
@@ -81,7 +81,7 @@ def _flat(x):
 def test_flash_attention_sweep(seq, causal, dtype):
     b, h, hd = 2, 3, 64
     q, k, v = (_arr((b, seq, h, hd), dtype, 0.5) for _ in range(3))
-    got = ops.flash_attention(q, k, v, causal=causal, bq=64, bk=64)
+    got = api.flash_attention(q, k, v, causal=causal, bq=64, bk=64)
     want = ref.flash_attention_ref(_flat(q), _flat(k), _flat(v), causal=causal)
     want = want.reshape(b, h, seq, hd).transpose(0, 2, 1, 3)
     tol = 5e-5 if dtype == np.float32 else 3e-2
@@ -94,7 +94,7 @@ def test_flash_attention_cross_lengths():
     q = _arr((1, 48, 2, 32))
     k = _arr((1, 160, 2, 32))
     v = _arr((1, 160, 2, 32))
-    got = ops.flash_attention(q, k, v, causal=False, bq=16, bk=64)
+    got = api.flash_attention(q, k, v, causal=False, bq=16, bk=64)
     want = ref.flash_attention_ref(_flat(q), _flat(k), _flat(v), causal=False)
     want = want.reshape(1, 2, 48, 32).transpose(0, 2, 1, 3)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-5, atol=5e-5)
@@ -108,7 +108,7 @@ def test_ssm_scan_sweep(seq, chunk):
     a = -jnp.abs(_arr((bsz, seq, h))) * 0.2
     B_ = _arr((bsz, seq, n))
     C_ = _arr((bsz, seq, n))
-    got = ops.ssm_scan(u, a, B_, C_, chunk=chunk)
+    got = api.ssm_scan(u, a, B_, C_, chunk=chunk)
 
     def flat(x):
         if x.ndim == 4:

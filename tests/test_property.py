@@ -9,7 +9,7 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.pchase import detect_plateaus, single_cycle_permutation
 from repro.core.throttle import T4_THROTTLE, simulate, steady_state_clock
-from repro.kernels import ops, ref
+from repro.kernels import api, ref
 
 FAST = settings(max_examples=20, deadline=None)
 
@@ -81,7 +81,7 @@ def test_flash_attention_matches_oracle_property(s, hd, causal, seed):
     q = jnp.asarray(rng.normal(size=(1, s, 1, hd)).astype(np.float32))
     k = jnp.asarray(rng.normal(size=(1, s, 1, hd)).astype(np.float32))
     v = jnp.asarray(rng.normal(size=(1, s, 1, hd)).astype(np.float32))
-    got = ops.flash_attention(q, k, v, causal=causal, bq=32, bk=32)
+    got = api.flash_attention(q, k, v, causal=causal, bq=32, bk=32)
     want = ref.flash_attention_ref(
         q[:, :, 0], k[:, :, 0], v[:, :, 0], causal=causal
     )[:, :, None]
@@ -100,7 +100,7 @@ def test_ssm_scan_matches_sequential_property(s, chunk, seed):
     a = -jnp.abs(jnp.asarray(rng.normal(size=(1, s, 1)).astype(np.float32))) * 0.3
     B_ = jnp.asarray(rng.normal(size=(1, s, 4)).astype(np.float32))
     C_ = jnp.asarray(rng.normal(size=(1, s, 4)).astype(np.float32))
-    got = ops.ssm_scan(u, a, B_, C_, chunk=chunk)[:, :, 0]
+    got = api.ssm_scan(u, a, B_, C_, chunk=chunk)[:, :, 0]
     want = ref.ssm_scan_ref(u[:, :, 0], a[:, :, 0], B_, C_)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
 
@@ -133,5 +133,5 @@ def test_pchase_kernel_walk_property(seed, steps):
     from repro.core.pchase import single_cycle_permutation
 
     perm = single_cycle_permutation(128, seed)
-    got = int(ops.pchase(jnp.asarray(perm), steps)[0, 0])
+    got = int(api.pchase(jnp.asarray(perm), steps)[0, 0])
     assert got == ref.pchase_ref(perm, steps)

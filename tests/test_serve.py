@@ -1,0 +1,354 @@
+"""Serving-engine behaviour: scheduler protocol (FCFS vs priority parity,
+user-supplied policies), chunked batched prefill exactness, streaming
+sessions (callbacks, cancellation), and edge cases (slot exhaustion, EOS
+mid-stream, max_len truncation, quick-mode record determinism)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import (
+    EngineConfig,
+    FCFSScheduler,
+    PriorityScheduler,
+    ServeEngine,
+    StaticBatchScheduler,
+)
+
+
+@pytest.fixture(scope="module")
+def gemma():
+    cfg = get_config("gemma-2b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _prompts(cfg, n, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        [int(t) for t in rng.integers(1, cfg.vocab_size, lens[i % len(lens)])]
+        for i in range(n)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# chunked batched prefill is exact
+# ---------------------------------------------------------------------------
+def test_chunked_prefill_matches_per_token_decode(gemma):
+    """decode_chunk over a ragged admitted batch == sequential decode_step
+    per lane (the oracle the old per-token Python prefill implemented)."""
+    cfg, model, params = gemma
+    max_len, lens = 32, [7, 3, 5]
+    toks = _prompts(cfg, 3, lens, seed=3)
+
+    for b, prompt in enumerate(toks):
+        cache = model.init_cache(1, max_len)
+        for t, tok in enumerate(prompt):
+            want, cache = model.decode_step(
+                params, cache, jnp.asarray([tok], jnp.int32),
+                jnp.full((1,), t, jnp.int32),
+            )
+        chunk = 4
+        n_chunks = -(-max(lens) // chunk)
+        tk = np.zeros((3, n_chunks * chunk), np.int32)
+        ps = np.full((3, n_chunks * chunk), max_len, np.int32)
+        for i, p in enumerate(toks):
+            tk[i, : len(p)] = p
+            ps[i, : len(p)] = np.arange(len(p))
+        cache_c = model.init_cache(3, max_len)
+        got = None
+        for c in range(n_chunks):
+            sl = slice(c * chunk, (c + 1) * chunk)
+            lg, cache_c = model.decode_chunk(
+                params, cache_c, jnp.asarray(tk[:, sl]), jnp.asarray(ps[:, sl])
+            )
+            if c * chunk < len(prompt) <= (c + 1) * chunk:
+                got = lg[b, len(prompt) - 1 - c * chunk]
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want[0]), rtol=2e-4, atol=2e-4
+        )
+
+
+@pytest.mark.parametrize("chunk", [1, 4, 64])
+def test_prefill_chunk_size_does_not_change_output(gemma, chunk):
+    cfg, model, params = gemma
+
+    def run(c):
+        eng = ServeEngine(
+            model, params, EngineConfig(n_slots=2, max_len=48, prefill_chunk=c)
+        )
+        ss = [eng.submit(p, 5) for p in _prompts(cfg, 3, [6, 11], seed=1)]
+        eng.run(300)
+        return [s.out for s in ss]
+
+    assert run(chunk) == run(8)
+
+
+# ---------------------------------------------------------------------------
+# scheduler protocol
+# ---------------------------------------------------------------------------
+def test_fcfs_vs_priority_parity(gemma):
+    """Admission order must not change any request's tokens — only its
+    scheduling.  Priorities reverse the admission order here."""
+    cfg, model, params = gemma
+    prompts = _prompts(cfg, 6, [4, 6, 5], seed=2)
+
+    def run(sched, priorities):
+        eng = ServeEngine(
+            model, params,
+            EngineConfig(n_slots=2, max_len=48), scheduler=sched,
+        )
+        ss = [
+            eng.submit(p, 4, priority=pr) for p, pr in zip(prompts, priorities)
+        ]
+        fin = eng.run(500)
+        assert len(fin) == len(prompts)
+        return {s.rid: s.out for s in ss}, [s.rid for s in fin]
+
+    out_f, order_f = run(FCFSScheduler(), [0] * 6)
+    out_p, order_p = run(PriorityScheduler(), list(range(6)))
+    assert out_f == out_p  # token parity
+    # highest priority (last submitted) admits first once slots free up
+    assert order_p != order_f
+
+
+def test_priority_scheduler_admits_high_priority_first(gemma):
+    cfg, model, params = gemma
+    eng = ServeEngine(
+        model, params, EngineConfig(n_slots=1, max_len=32),
+        scheduler=PriorityScheduler(),
+    )
+    low = eng.submit([3, 4], 2, priority=0)
+    high = eng.submit([5, 6], 2, priority=9)
+    fin = eng.run(100)
+    assert [s.rid for s in fin] == [high.rid, low.rid]
+
+
+def test_user_supplied_scheduler(gemma):
+    """Any object with submit/select/pending plugs in: LIFO as a worked
+    example of the protocol."""
+    cfg, model, params = gemma
+
+    class LIFOScheduler:
+        def __init__(self):
+            self.stack = []
+
+        def submit(self, session):
+            self.stack.append(session)
+
+        def select(self, n_free, n_slots):
+            out = []
+            while self.stack and len(out) < n_free:
+                s = self.stack.pop()
+                if not s.done:
+                    out.append(s)
+            return out
+
+        def pending(self):
+            return sum(1 for s in self.stack if not s.done)
+
+    eng = ServeEngine(
+        model, params, EngineConfig(n_slots=1, max_len=32), scheduler=LIFOScheduler()
+    )
+    a = eng.submit([3, 4], 2)
+    b = eng.submit([5, 6], 2)
+    fin = eng.run(100)
+    assert [s.rid for s in fin] == [b.rid, a.rid]
+
+
+def test_static_batch_scheduler_admits_only_into_idle_engine(gemma):
+    cfg, model, params = gemma
+    eng = ServeEngine(
+        model, params, EngineConfig(n_slots=2, max_len=32),
+        scheduler=StaticBatchScheduler(),
+    )
+    ss = [eng.submit([2 + i, 7], 3) for i in range(3)]
+    # first step admits the first full batch; the third stays queued until
+    # BOTH slots drain (batch boundary), not the moment one slot frees
+    eng.step()
+    assert ss[0].status != "queued" and ss[1].status != "queued"
+    assert ss[2].status == "queued"
+    while ss[2].status == "queued" and eng.has_work():
+        eng.step()
+    # admission of the straggler only happened once the whole batch drained
+    assert ss[0].done and ss[1].done
+    fin = eng.run(200)
+    assert len(fin) == 3
+
+
+def test_recurrent_family_rejected_loudly():
+    """Families without decode_chunk (recurrent per-lane state) must be
+    refused up front — the old engine silently corrupted neighbour lanes."""
+    cfg = get_config("xlstm-1.3b").reduced()
+    model = build_model(cfg)
+    assert model.decode_chunk is None
+    with pytest.raises(NotImplementedError, match="decode_chunk"):
+        ServeEngine(model, None, EngineConfig(n_slots=2, max_len=16))
+
+
+def test_non_scheduler_rejected(gemma):
+    cfg, model, params = gemma
+    with pytest.raises(TypeError, match="Scheduler protocol"):
+        ServeEngine(
+            model, params, EngineConfig(n_slots=1, max_len=16), scheduler=object()
+        )
+
+
+# ---------------------------------------------------------------------------
+# edge cases
+# ---------------------------------------------------------------------------
+def test_slot_exhaustion_queues_and_drains(gemma):
+    """More requests than slots: the queue drains via continuous batching
+    and at no point do more than n_slots sessions run."""
+    cfg, model, params = gemma
+    eng = ServeEngine(model, params, EngineConfig(n_slots=2, max_len=48))
+    ss = [eng.submit(p, 3) for p in _prompts(cfg, 7, [4], seed=4)]
+    assert eng.scheduler.pending() == 7
+    seen_active = []
+    while eng.has_work():
+        eng.step()
+        seen_active.append(sum(s is not None for s in eng.slots))
+    assert max(seen_active) <= 2
+    assert len(eng.finished) == 7
+    assert all(len(s.out) == 3 for s in ss)
+    assert eng.scheduler.pending() == 0
+
+
+def test_eos_mid_stream_frees_slot(gemma):
+    """A sampled EOS finishes the request early with reason "eos"."""
+    cfg, model, params = gemma
+    probe = ServeEngine(model, params, EngineConfig(n_slots=1, max_len=48))
+    s0 = probe.submit([5, 6, 7], 8)
+    probe.run(100)
+    assert len(s0.out) == 8
+    eos = s0.out[2]  # force EOS on the 3rd generated token
+    eng = ServeEngine(model, params, EngineConfig(n_slots=1, max_len=48, eos_id=eos))
+    s = eng.submit([5, 6, 7], 8)
+    eng.run(100)
+    assert s.finish_reason == "eos"
+    assert len(s.out) == 3 and s.out[-1] == eos
+    assert eng.slots[0] is None  # slot freed for the next request
+
+
+def test_max_len_truncation(gemma):
+    """Generation stops with reason "max_len" when the cache lane is full.
+    The final token needs no KV write, so capacity is
+    max_len - len(prompt) + 1 generated tokens."""
+    cfg, model, params = gemma
+    eng = ServeEngine(model, params, EngineConfig(n_slots=1, max_len=8))
+    s = eng.submit([1, 2, 3, 4, 5], max_new_tokens=50)
+    eng.run(100)
+    assert s.finish_reason == "max_len"
+    assert len(s.out) == 8 - 5 + 1
+
+
+def test_prompt_validation(gemma):
+    cfg, model, params = gemma
+    eng = ServeEngine(model, params, EngineConfig(n_slots=1, max_len=8))
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit([], 4)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(list(range(1, 9)), 4)  # prompt fills the whole cache
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit([1, 2], 0)
+
+
+def test_cancellation_queued_and_running(gemma):
+    cfg, model, params = gemma
+    eng = ServeEngine(model, params, EngineConfig(n_slots=1, max_len=32))
+    running = eng.submit([3, 4, 5], 50)
+    queued = eng.submit([6, 7], 4)
+    eng.step()  # running admitted; queued waits
+    assert running.status == "active" and queued.status == "queued"
+    queued.cancel()
+    assert queued.status == "cancelled" and queued.finish_reason == "cancelled"
+    eng.step()
+    n_before = len(running.out)
+    running.cancel()
+    fin = eng.run(100)
+    assert running.finish_reason == "cancelled"
+    assert len(running.out) == n_before  # no tokens after the cancel boundary
+    # both cancellation paths land in finished and in the metrics
+    assert [s.rid for s in fin] == [queued.rid, running.rid]
+    assert eng.summary()["cancelled"] == 2
+    assert not eng.has_work()
+
+
+def test_streaming_callback_order_and_stats(gemma):
+    cfg, model, params = gemma
+    eng = ServeEngine(model, params, EngineConfig(n_slots=2, max_len=32))
+    got = []
+    s = eng.submit([4, 5, 6], 5, on_token=lambda sess, tok: got.append(tok))
+    eng.run(100)
+    assert got == s.out and len(got) == 5
+    st = s.stats
+    assert st.ttft_s is not None and st.ttft_s > 0
+    assert st.finished_at >= st.first_token_at >= st.admitted_at >= st.submitted_at
+    assert len(st.token_times) == 5
+    assert len(st.token_latencies_s) == 4
+    assert all(lat >= 0 for lat in st.token_latencies_s)
+
+
+def test_engine_backend_policy_traced_per_engine(gemma):
+    """Two engines over the SAME model with different backends must each
+    trace under their own kernel policy: jax's trace cache is keyed on
+    function identity, so jitting the shared model.decode_step directly
+    would let the second engine silently reuse the first's trace."""
+    import dataclasses
+
+    from repro.kernels import api as kapi
+
+    cfg, model, params = gemma
+    seen = []
+    orig_step, orig_chunk = model.decode_step, model.decode_chunk
+
+    def spy_step(p, cache, toks, pos):
+        seen.append(kapi.current_policy().backend)  # runs at trace time only
+        return orig_step(p, cache, toks, pos)
+
+    spy_model = dataclasses.replace(model, decode_step=spy_step)
+
+    def run(backend):
+        eng = ServeEngine(
+            spy_model, params,
+            EngineConfig(n_slots=1, max_len=16, backend=backend),
+        )
+        eng.submit([3, 4], 2)
+        eng.run(50)
+
+    run("xla")
+    run("interpret")
+    assert "xla" in seen and "interpret" in seen, seen
+    assert orig_chunk is model.decode_chunk  # replace() didn't mutate the original
+
+
+# ---------------------------------------------------------------------------
+# bench-suite integration
+# ---------------------------------------------------------------------------
+def test_serving_quick_records_deterministic_names_and_schema():
+    """Quick-mode serving records: stable names/shape across runs, schema
+    valid, and the required metrics present for both backends."""
+    from repro.bench import BenchResult, EnvFingerprint, runner, validate_result
+    from repro.core import registry
+
+    runner.load_suites()
+    overrides = {"requests": 2, "out_lens": (3,), "prompt_lens": (4,)}
+
+    def names_for(variant):
+        recs = registry.get(variant).run("quick", overrides=overrides)
+        res = BenchResult(mode="quick", env=EnvFingerprint.capture(), records=recs)
+        validate_result(res.to_dict())
+        return [r.name for r in recs], recs
+
+    for variant in ("serving[pallas]", "serving[xla]"):
+        names1, recs = names_for(variant)
+        names2, _ = names_for(variant)
+        assert names1 == names2  # deterministic record identity
+        for metric in ("ttft", "tok_latency_p50", "tok_latency_p95",
+                       "throughput", "occupancy"):
+            assert any(metric in n for n in names1), (metric, names1)
+        units = {r.unit for r in recs}
+        assert {"ms", "tok/s"} <= units

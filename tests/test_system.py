@@ -9,7 +9,7 @@ from repro.data import DataPipeline, SyntheticLM
 from repro.models import build_model
 from repro.optim import AdamW
 from repro.optim.schedule import cosine_with_warmup
-from repro.serve import ServeEngine
+from repro.serve import EngineConfig, ServeEngine
 from repro.train.loop import LoopConfig, train_loop
 from repro.train.step import TrainState, make_train_step
 
@@ -63,17 +63,24 @@ def test_serve_engine_continuous_batching():
     cfg = get_config("gemma-2b").reduced()
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
-    engine = ServeEngine(model, params, n_slots=2, max_len=64)
+    engine = ServeEngine(
+        model, params, EngineConfig(n_slots=2, max_len=64, prefill_chunk=4)
+    )
     rng = np.random.default_rng(0)
-    reqs = [
+    sessions = [
         engine.submit(list(rng.integers(1, cfg.vocab_size, 4)), max_new_tokens=6)
         for _ in range(5)  # 5 requests > 2 slots -> continuous batching
     ]
     finished = engine.run(max_ticks=500)
     assert len(finished) == 5
-    for r in finished:
-        assert len(r.out) == 6
-        assert all(0 <= t < cfg.vocab_size for t in r.out)
+    assert {s.rid for s in finished} == {s.rid for s in sessions}
+    for s in finished:
+        assert len(s.out) == 6
+        assert s.finish_reason == "max_new_tokens"
+        assert all(0 <= t < cfg.vocab_size for t in s.out)
+    summ = engine.summary()
+    assert summ["requests"] == 5 and summ["generated_tokens"] == 30
+    assert summ["throughput_tok_s"] > 0 and summ["ttft_ms_mean"] > 0
 
 
 def test_serve_greedy_deterministic():
@@ -82,7 +89,7 @@ def test_serve_greedy_deterministic():
     params = model.init(jax.random.key(0))
 
     def run_once():
-        engine = ServeEngine(model, params, n_slots=1, max_len=32)
+        engine = ServeEngine(model, params, EngineConfig(n_slots=1, max_len=32))
         engine.submit([5, 6, 7], max_new_tokens=8)
         return engine.run(max_ticks=100)[0].out
 

@@ -1,6 +1,7 @@
 """Batched serving example: continuous batching over more requests than
 slots on a reduced gemma config, with a streamed (per-token callback)
-request, a priority scheduler, and the engine's serving metrics.
+request, a priority scheduler, paged KV with a shared system prefix, and
+the engine's serving metrics.
 
     PYTHONPATH=src python examples/serve_batch.py
 """
@@ -19,13 +20,19 @@ def main():
     engine = ServeEngine(
         model,
         params,
-        EngineConfig(n_slots=4, max_len=96, prefill_chunk=8),
+        # paged KV: lanes draw 16-token pages from a shared pool instead of
+        # reserving max_len each; drop page_size for the dense layout
+        EngineConfig(n_slots=4, max_len=96, prefill_chunk=8, page_size=16),
         scheduler=PriorityScheduler(),
     )
 
     rng = np.random.default_rng(0)
+    # a "system prompt" stored once: every request below starts with it and
+    # shares its KV pages copy-on-write instead of re-prefilling them
+    system = list(rng.integers(1, cfg.vocab_size, 12))
+    engine.register_prefix(system)
     for i in range(10):
-        prompt = list(rng.integers(1, cfg.vocab_size, 4 + i % 5))
+        prompt = system + list(rng.integers(1, cfg.vocab_size, 4 + i % 5))
         engine.submit(prompt, max_new_tokens=8 + i % 7, priority=i % 3)
 
     # a streamed request: tokens arrive through the callback as they decode
@@ -33,7 +40,7 @@ def main():
     engine.submit(
         list(rng.integers(1, cfg.vocab_size, 6)),
         max_new_tokens=10,
-        priority=5,  # jumps the queue under PriorityScheduler
+        priority=5,  # jumps the queue under PriorityScheduler (no shared prefix)
         on_token=lambda sess, tok: streamed.append(tok),
     )
 
@@ -45,6 +52,11 @@ def main():
         f"ttft {s['ttft_ms_mean']:.0f}ms, occupancy {s['occupancy']:.0%})"
     )
     print(f"streamed request got {len(streamed)} tokens via callback: {streamed}")
+    print(
+        f"paged KV: peak {s['pages_peak']}/{engine.n_pages} pages, "
+        f"{s['prefix_tokens_reused']} system-prompt tokens reused across "
+        f"{s['prefix_hits']} requests"
+    )
     for sess in finished:
         print(
             f"  req {sess.rid} prio {sess.priority} [{sess.finish_reason}]: "

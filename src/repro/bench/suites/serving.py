@@ -4,9 +4,20 @@ applied to the engine itself.
 The T4 is an inference board and the paper's recipe is measuring the *same*
 workload under steady load across hardware paths; this suite restates that
 for the serving stack: one engine definition driven over slot-count ×
-prompt-length × output-length sweeps, registered once per kernel backend
-(``serving[pallas]`` / ``serving[xla]``), emitting TTFT, per-token latency
-percentiles, throughput, and slot occupancy as schema-v1 records.
+prompt-length × output-length × KV-layout sweeps, registered once per kernel
+backend (``serving[pallas]`` / ``serving[xla]``), emitting TTFT, per-token
+latency percentiles, throughput, and slot/page occupancy as schema-v1
+records.  Three KV-layout contrasts ride on the common sweep:
+
+- **paged vs dense** at the same slot count (``serving_*_ps{k}`` vs the
+  unsuffixed rows): same tokens, paged overhead isolated,
+- **equal-memory** (``serving_eqmem_*``): a dense engine and a paged engine
+  holding the *same KV pool bytes*, the paged one oversubscribing slots
+  against it — its ``concurrency`` row (mean active lanes) is the headline
+  paging win,
+- **shared prefix** (``serving_prefix_*``): every prompt shares a registered
+  system-prompt prefix; the ``page_occupancy`` row's ``prefix_tokens_reused``
+  metric counts prompt tokens served from shared pages instead of prefill.
 """
 from __future__ import annotations
 
@@ -31,11 +42,14 @@ def _build_model():
 
 
 def _drive(cfg, model, params, *, backend, n_slots, prompt_len, out_len,
-           requests, prefill_chunk, scheduler, seed=0):
+           requests, prefill_chunk, scheduler, seed=0, max_len=None,
+           page_size=None, n_pages=None, prefix_len=0):
     """One measured engine run.  Warm-up requests go through the SAME engine
     (its compiled steps are per-engine closures, so a throwaway engine would
     not pre-compile anything) and their telemetry is discarded before the
-    measured batch."""
+    measured batch.  ``page_size`` switches the engine to paged KV;
+    ``prefix_len`` registers a shared prefix that every prompt then starts
+    with (paged only)."""
     from repro.serve import EngineConfig, ServeEngine
 
     engine = ServeEngine(
@@ -43,18 +57,24 @@ def _drive(cfg, model, params, *, backend, n_slots, prompt_len, out_len,
         params,
         EngineConfig(
             n_slots=n_slots,
-            max_len=prompt_len + out_len + 1,
+            max_len=max_len if max_len is not None else prompt_len + out_len + 1,
             prefill_chunk=prefill_chunk,
+            page_size=page_size,
+            n_pages=n_pages,
             backend=backend,
             scheduler=scheduler,
         ),
     )
     rng = np.random.default_rng(seed)
+    prefix = []
+    if prefix_len:
+        prefix = [int(t) for t in rng.integers(1, cfg.vocab_size, prefix_len)]
+        engine.register_prefix(prefix)
 
     def batch(n):
         for _ in range(n):
-            prompt = [int(t) for t in rng.integers(1, cfg.vocab_size, prompt_len)]
-            engine.submit(prompt, max_new_tokens=out_len)
+            tail = [int(t) for t in rng.integers(1, cfg.vocab_size, prompt_len)]
+            engine.submit(prefix + tail, max_new_tokens=out_len)
         finished = engine.run(max_ticks=50 * max(n, 1) * out_len)
         if len(finished) != n:
             raise RuntimeError(f"served {len(finished)}/{n} requests")
@@ -69,27 +89,35 @@ def _drive(cfg, model, params, *, backend, n_slots, prompt_len, out_len,
     "serving",
     backends=("pallas", "xla"),
     paper_ref="Ch.1 + Fig 4.3 (inference board under sustained load)",
-    description="serving-engine TTFT/latency/throughput sweep",
+    description="serving-engine TTFT/latency/throughput sweep (dense + paged KV)",
     quick={"slots": (2,), "prompt_lens": (8,), "out_lens": (8,), "requests": 4,
-           "prefill_chunk": 4},
+           "prefill_chunk": 4, "page_sizes": (4,), "oversub": 3,
+           "prefix_len": 6},
     full={"slots": (2, 4), "prompt_lens": (8, 32), "out_lens": (16,), "requests": 12,
-          "prefill_chunk": 8},
+          "prefill_chunk": 8, "page_sizes": (4, 16), "oversub": 3,
+          "prefix_len": 16},
 )
 def bench_serving(slots=(2,), prompt_lens=(8,), out_lens=(8,), requests=4,
-                  prefill_chunk=4, scheduler="fcfs", backend="xla") -> list:
+                  prefill_chunk=4, scheduler="fcfs", backend="xla",
+                  page_sizes=(), oversub=3, prefix_len=0) -> list:
     """Each sweep point drives a fresh engine over seeded prompts and reports
     its :class:`~repro.serve.metrics.EngineMetrics` rows.  A warm-up pass per
-    point keeps one-time compilation out of TTFT."""
+    point keeps one-time compilation out of TTFT.
+
+    ``page_sizes`` adds a paged twin per sweep point (same workload, paged
+    KV) plus, for the first page size, the equal-memory and shared-prefix
+    contrasts described in the module docstring.  ``oversub`` is the slot
+    multiplier the equal-memory paged engine runs at.
+    """
     cfg, model, params = _build_model()
     recs = []
     for ns in slots:
         for pl in prompt_lens:
             for ol in out_lens:
-                engine = _drive(
-                    cfg, model, params, backend=backend, n_slots=ns,
-                    prompt_len=pl, out_len=ol, prefill_chunk=prefill_chunk,
-                    scheduler=scheduler, requests=requests,
-                )
+                common = dict(backend=backend, n_slots=ns, prompt_len=pl,
+                              out_len=ol, prefill_chunk=prefill_chunk,
+                              scheduler=scheduler, requests=requests)
+                engine = _drive(cfg, model, params, **common)
                 recs.extend(
                     engine.metrics.to_records(
                         benchmark="serving",
@@ -97,4 +125,77 @@ def bench_serving(slots=(2,), prompt_lens=(8,), out_lens=(8,), requests=4,
                         x=f"s{ns}:p{pl}:o{ol}",
                     )
                 )
+                for ps in page_sizes:
+                    engine = _drive(cfg, model, params, page_size=ps, **common)
+                    recs.extend(
+                        engine.metrics.to_records(
+                            benchmark="serving",
+                            prefix=f"serving_s{ns}_p{pl}_o{ol}_ps{ps}",
+                            x=f"s{ns}:p{pl}:o{ol}:ps{ps}",
+                        )
+                    )
+    if page_sizes:
+        ps = page_sizes[0]
+        ns, pl, ol = slots[0], prompt_lens[0], out_lens[0]
+        recs.extend(
+            _eqmem_contrast(cfg, model, params, backend=backend, n_slots=ns,
+                            prompt_len=pl, out_len=ol, page_size=ps,
+                            oversub=oversub, prefill_chunk=prefill_chunk,
+                            scheduler=scheduler, requests=max(requests, 2 * ns))
+        )
+        if prefix_len:
+            engine = _drive(cfg, model, params, backend=backend, n_slots=ns,
+                            prompt_len=pl, out_len=ol, page_size=ps,
+                            prefix_len=prefix_len, prefill_chunk=prefill_chunk,
+                            scheduler=scheduler, requests=requests,
+                            max_len=prefix_len + pl + ol + 1)
+            recs.extend(
+                engine.metrics.to_records(
+                    benchmark="serving",
+                    prefix=f"serving_prefix_s{ns}_ps{ps}",
+                    x=f"prefix{prefix_len}:s{ns}:ps{ps}",
+                )
+            )
+    return recs
+
+
+def _eqmem_contrast(cfg, model, params, *, backend, n_slots, prompt_len,
+                    out_len, page_size, oversub, prefill_chunk, scheduler,
+                    requests):
+    """Dense vs paged at EQUAL KV memory.
+
+    Both engines hold KV for ``n_slots * max_len`` positions, with
+    ``max_len`` sized well above the actual request length (the realistic
+    regime: max_len is a cap, typical requests are shorter).  Dense commits a
+    full ``max_len`` region per lane, so it runs ``n_slots`` lanes; the paged
+    engine spends the same pool on ``oversub * n_slots`` slots whose lanes
+    only consume pages they actually touch.  The ``concurrency`` rows (mean
+    active lanes, ``better="higher"``) are the comparison: more of the same
+    memory doing useful work at once.
+    """
+    seq = prompt_len + out_len + 1
+    max_len = max(oversub * seq, 2 * seq)  # headroom: requests << max_len
+    pages_per_lane = -(-max_len // page_size)
+    n_pages = n_slots * pages_per_lane  # exactly dense's KV footprint
+    common = dict(backend=backend, prompt_len=prompt_len, out_len=out_len,
+                  prefill_chunk=prefill_chunk, scheduler=scheduler,
+                  requests=requests, max_len=max_len)
+    recs = []
+    dense = _drive(cfg, model, params, n_slots=n_slots, **common)
+    recs.extend(
+        dense.metrics.to_records(
+            benchmark="serving",
+            prefix=f"serving_eqmem_dense_s{n_slots}",
+            x=f"eqmem:dense:s{n_slots}",
+        )
+    )
+    paged = _drive(cfg, model, params, n_slots=oversub * n_slots,
+                   page_size=page_size, n_pages=n_pages, **common)
+    recs.extend(
+        paged.metrics.to_records(
+            benchmark="serving",
+            prefix=f"serving_eqmem_paged_s{oversub * n_slots}_ps{page_size}",
+            x=f"eqmem:paged:s{oversub * n_slots}:ps{page_size}",
+        )
+    )
     return recs

@@ -2,6 +2,11 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b --reduced \
         --requests 6 --max-new 16 --scheduler priority --backend xla
+
+Paged KV + shared prefix (see docs/serving.md):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
+        --requests 8 --slots 6 --page-size 16 --n-pages 48 --shared-prefix 12
 """
 from __future__ import annotations
 
@@ -25,6 +30,17 @@ def main(argv=None):
     ap.add_argument("--scheduler", choices=sorted(SCHEDULERS), default="fcfs")
     ap.add_argument("--backend", choices=("pallas", "interpret", "xla"), default=None,
                     help="kernel_policy backend for the engine's compiled steps")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="KV slots per page; enables the paged KV pool "
+                         "(default: dense per-slot regions)")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="page-pool size (default: worst case, "
+                         "slots * ceil(max_len/page_size)); set lower to "
+                         "oversubscribe slots against real KV memory")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="length of a common prefix prepended to every "
+                         "prompt and registered once via register_prefix "
+                         "(paged mode only)")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
@@ -49,15 +65,23 @@ def main(argv=None):
             n_slots=args.slots,
             max_len=args.max_len,
             prefill_chunk=args.prefill_chunk,
+            page_size=args.page_size,
+            n_pages=args.n_pages,
             backend=args.backend,
             scheduler=args.scheduler,
         ),
     )
 
     rng = np.random.default_rng(args.seed)
+    prefix = []
+    if args.shared_prefix:
+        if args.page_size is None:
+            raise SystemExit("--shared-prefix requires --page-size (paged KV)")
+        prefix = [int(t) for t in rng.integers(1, cfg.vocab_size, args.shared_prefix)]
+        engine.register_prefix(prefix)
     sessions = [
         engine.submit(
-            list(rng.integers(1, cfg.vocab_size, args.prompt_len)),
+            prefix + list(rng.integers(1, cfg.vocab_size, args.prompt_len)),
             args.max_new,
             priority=i % 3,  # exercise the priority axis under --scheduler priority
         )
@@ -75,6 +99,14 @@ def main(argv=None):
         f"per-token p50 {s['tok_latency_ms_p50']:.2f}ms p95 "
         f"{s['tok_latency_ms_p95']:.2f}ms; occupancy {s['occupancy']:.0%}"
     )
+    if args.page_size is not None:
+        print(
+            f"paged KV: {engine.n_pages} pages x {args.page_size} slots, "
+            f"peak {s['pages_peak']} used ({s['page_occupancy']:.0%} mean), "
+            f"{s['preemptions']} preemptions, "
+            f"{s['prefix_tokens_reused']} prefix tokens reused "
+            f"({s['prefix_hits']} hits)"
+        )
     for sess in finished[:4]:
         print(f"  req {sess.rid} [{sess.finish_reason}]: "
               f"{sess.out[:10]}{'...' if len(sess.out) > 10 else ''}")

@@ -1,15 +1,25 @@
 """Unified model API: one façade over the four model families.
 
-``build_model(cfg)`` returns a ``ModelApi`` exposing:
-  - ``init(rng)``                       -> params
-  - ``loss_fn(params, batch)``          -> scalar loss        (train cells)
-  - ``prefill(params, batch)``          -> (logits, cache)    (prefill cells)
-  - ``decode_step(params, cache, tokens, pos)`` -> (logits, cache) (decode cells)
-  - ``decode_chunk(params, cache, tokens (B,C), positions (B,C))``
-    -> (logits (B,C,V), cache) — C decode steps fused into one compiled call
-    (chunked batched prefill); None for recurrent families
-  - ``init_cache/cache_specs(batch, max_len)``
-and ``input_specs(cfg, shape)`` builds ShapeDtypeStruct stand-ins for every
+``build_model(cfg)`` returns a :class:`ModelApi` — a frozen bundle of pure
+functions closed over the config.  Every entry point is jit-compatible and
+side-effect free; state (params, caches) flows through arguments and return
+values, never through the object, which is why one ``ModelApi`` can safely
+back many engines/benches at once (each jits its own closures, see
+``ServeEngine._jit_scoped``).
+
+Two KV-cache layouts coexist behind the same façade:
+
+- **dense** — ``init_cache(batch, max_len)`` reserves one contiguous
+  ``max_len`` region per lane; ``decode_step``/``decode_chunk`` index it
+  directly.  Memory is ``batch * max_len`` regardless of actual lengths.
+- **paged** — ``init_paged_cache(n_pages, page_size)`` builds one global
+  page pool shared by all lanes; ``decode_step_paged``/``decode_chunk_paged``
+  take an extra ``block_table (B, T)`` mapping each lane's logical position
+  ``t`` to pool page ``bt[b, t // page]``.  Lanes may reference the same page
+  (shared prefixes); the caller guarantees shared pages are never written
+  (see ``repro.serve.paging``).
+
+``input_specs(cfg, shape)`` builds ShapeDtypeStruct stand-ins for every
 input of the step function a given shape cell lowers (dry-run: zero
 allocation).
 """
@@ -32,6 +42,18 @@ Params = Any
 
 @dataclass(frozen=True)
 class ModelApi:
+    """Per-family model surface.  All callables are pure and jit-safe.
+
+    Field contracts (shapes use B=batch/lanes, C=chunk, T=table width):
+
+    - ``init(rng) -> params``
+    - ``loss_fn(params, batch) -> scalar``                      (train cells)
+    - ``prefill(params, batch) -> (last_logits (B,V), cache)``  (prefill cells)
+    - ``decode_step(params, cache, tokens (B,), pos (B,)) -> (logits (B,V), cache)``
+    - ``init_cache(batch, max_len) / cache_specs(batch, max_len)`` — dense
+      per-lane KV cache (specs: ShapeDtypeStruct stand-ins, zero allocation)
+    """
+
     cfg: ModelConfig
     init: Callable
     loss_fn: Callable
@@ -45,6 +67,19 @@ class ModelApi:
     # ignored).  None for families whose per-lane state cannot yet advance
     # independently inside a shared batch (recurrent ssm/hybrid caches).
     decode_chunk: Optional[Callable] = None
+    # Paged-KV twins (None where unsupported).  The cache is a global page
+    # pool {"k"/"v": (L, n_pages, page, K, hd)} built by
+    # ``init_paged_cache(n_pages, page_size)``; decode ops take an extra
+    # ``block_table (B, T)`` int32 argument ahead of tokens/positions and a
+    # position >= T*page means "pad: write nothing".  Gathering a lane's
+    # pages reproduces its dense cache exactly, so paged decode is
+    # token-for-token equal to the dense path.
+    init_paged_cache: Optional[Callable] = None
+    paged_cache_specs: Optional[Callable] = None
+    # (params, cache, block_table, tokens (B,), pos (B,)) -> (logits, cache)
+    decode_step_paged: Optional[Callable] = None
+    # (params, cache, block_table, tokens (B,C), positions (B,C)) -> (logits, cache)
+    decode_chunk_paged: Optional[Callable] = None
 
 
 def _cache_dtype(cfg):
@@ -79,6 +114,26 @@ def build_model(cfg: ModelConfig) -> ModelApi:
         def init_cache(batch, max_len):
             return attn.init_cache(cfg, batch, max_len, cfg.n_layers, _cache_dtype(cfg))
 
+        def init_paged_cache(n_pages, page_size):
+            return attn.init_paged_cache(
+                cfg, n_pages, page_size, cfg.n_layers, _cache_dtype(cfg)
+            )
+
+        def paged_cache_specs(n_pages, page_size):
+            return attn.paged_cache_specs(
+                cfg, n_pages, page_size, cfg.n_layers, _cache_dtype(cfg)
+            )
+
+        def decode_step_paged(params, cache, block_table, tokens, pos):
+            return transformer.lm_decode_step_paged(
+                params, cache, block_table, tokens, pos, cfg
+            )
+
+        def decode_chunk_paged(params, cache, block_table, tokens, positions):
+            return transformer.lm_decode_chunk_paged(
+                params, cache, block_table, tokens, positions, cfg
+            )
+
         return ModelApi(
             cfg,
             lambda rng: transformer.lm_init(rng, cfg),
@@ -88,6 +143,10 @@ def build_model(cfg: ModelConfig) -> ModelApi:
             init_cache,
             cache_specs,
             decode_chunk=decode_chunk,
+            init_paged_cache=init_paged_cache,
+            paged_cache_specs=paged_cache_specs,
+            decode_step_paged=decode_step_paged,
+            decode_chunk_paged=decode_chunk_paged,
         )
 
     if fam == "ssm":  # xlstm

@@ -222,6 +222,120 @@ def cache_specs(cfg, batch: int, max_len: int, n_layers: int, dtype=jnp.bfloat16
     }
 
 
+# ---------------------------------------------------------------------------
+# paged KV cache: a global page pool indexed through per-lane block tables
+# ---------------------------------------------------------------------------
+# Layout: the dense (L, B, Smax, K, hd) per-lane cache becomes one global
+# pool (L, N_pages, page, K, hd) shared by every lane.  A lane's cache is the
+# ordered page list in its block-table row: logical position t lives in page
+# ``bt[lane, t // page]`` at offset ``t % page``, so a gather of the row
+# reconstructs the dense per-lane layout exactly (gathered index == logical
+# position).  Lanes share read-only pages (common prefixes) by listing the
+# same page id; the host-side allocator (repro.serve.paging) guarantees a
+# page referenced by more than one owner is never written.
+def init_paged_cache(cfg, n_pages: int, page_size: int, n_layers: int, dtype=jnp.bfloat16):
+    """Global KV page pool (L, N_pages, page, K, hd) pair."""
+    shape = (n_layers, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def paged_cache_specs(cfg, n_pages: int, page_size: int, n_layers: int, dtype=jnp.bfloat16):
+    shape = (n_layers, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, dtype),
+        "v": jax.ShapeDtypeStruct(shape, dtype),
+    }
+
+
+def gather_pages(pool: jax.Array, block_table: jax.Array) -> jax.Array:
+    """Reconstruct the dense per-lane cache view from the page pool.
+
+    pool (N_pages, page, K, hd); block_table (B, T) int32 page ids ->
+    (B, T*page, K, hd) where gathered index t IS logical position t.
+    Unallocated table slots (id 0 by convention) gather garbage the
+    attention masks drop (queries never look past their own position).
+    """
+    b, t = block_table.shape
+    g = pool[block_table]  # (B, T, page, K, hd)
+    return g.reshape(b, t * pool.shape[1], *pool.shape[2:])
+
+
+def paged_write(pool: jax.Array, block_table: jax.Array, positions: jax.Array,
+                val: jax.Array) -> jax.Array:
+    """Write new KV entries through the block table into the pool.
+
+    pool (N_pages, page, K, hd); block_table (B, T); positions (B, C) logical
+    slots (>= T*page is padding: no write); val (B, C, K, hd).  The write is a
+    one-hot select over flattened pool slots, not a scatter — the same
+    GSPMD-friendly trick as the dense decode write.  Distinct (lane, entry)
+    pairs must target distinct slots: the allocator never maps two writers to
+    one page, and a lane's positions are distinct by construction.
+    """
+    n, page = pool.shape[0], pool.shape[1]
+    t = block_table.shape[1]
+    pi = jnp.clip(positions // page, 0, t - 1)
+    pages = jnp.take_along_axis(block_table, pi, axis=1)  # (B, C)
+    flat = pages * page + positions % page
+    flat = jnp.where(positions < t * page, flat, n * page)  # pad -> out of range
+    onehot = flat[..., None] == jnp.arange(n * page, dtype=jnp.int32)  # (B,C,NP)
+    write = onehot.any(axis=(0, 1))[:, None, None]  # (NP,1,1)
+    new = jnp.einsum(
+        "bcn,bckd->nkd", onehot.astype(pool.dtype), val.astype(pool.dtype)
+    )
+    flat_pool = pool.reshape(n * page, *pool.shape[2:])
+    return jnp.where(write, new, flat_pool).reshape(pool.shape)
+
+
+def paged_decode_attention(
+    params: Params,
+    x: jax.Array,
+    cfg,
+    pool_k: jax.Array,
+    pool_v: jax.Array,
+    block_table: jax.Array,
+    pos: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step for one layer against the paged pool.
+
+    Same contract as :func:`decode_attention` but the cache is the global
+    (N_pages, page, K, hd) pool plus this batch's (B, T) block table; the new
+    token's KV is written through the table, then the lane's pages are
+    gathered back to the dense layout and attended exactly as the dense path.
+    Lanes with ``pos >= T*page`` (empty/pad lanes) write nothing.
+    """
+    b, _ = x.shape
+    q = jnp.einsum("bd,dhx->bhx", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bd,dkx->bkx", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bd,dkx->bkx", x, params["wv"].astype(x.dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    from .common import apply_rope
+
+    q = apply_rope(q[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+    k = apply_rope(k[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+
+    pool_k = paged_write(pool_k, block_table, pos[:, None], k[:, None])
+    pool_v = paged_write(pool_v, block_table, pos[:, None], v[:, None])
+    ck = gather_pages(pool_k, block_table)  # (B, T*page, K, hd)
+    cv = gather_pages(pool_v, block_table)
+
+    hd = cfg.head_dim
+    g = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(b, cfg.n_kv_heads, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, ck.astype(jnp.float32)) * hd**-0.5
+    mask = jnp.arange(ck.shape[1])[None] <= pos[:, None]  # (B, T*page)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, cv.astype(jnp.float32))
+    o = o / jnp.maximum(p.sum(-1)[..., None], 1e-30)
+    o = o.reshape(b, cfg.n_heads, hd).astype(x.dtype)
+    y = jnp.einsum("bhx,hxd->bd", o, params["wo"].astype(x.dtype))
+    return y, pool_k, pool_v
+
+
 def decode_attention(
     params: Params,
     x: jax.Array,

@@ -337,6 +337,130 @@ def lm_decode_chunk(params: Params, cache: dict, tokens: jax.Array, positions: j
     return logits, {"k": ks, "v": vs}
 
 
+# ---------------------------------------------------------------------------
+# paged decode: same maths, cache indirected through a block table
+# ---------------------------------------------------------------------------
+def _block_decode_paged(cfg, p: Params, x: jax.Array, pk, pv, block_table, pos):
+    """Single-token decode block against the paged pool.  x: (B,d);
+    pk/pv (N_pages, page, K, hd); block_table (B, T)."""
+    xin = rmsnorm(p["attn_norm"], x, cfg.norm_eps)
+    h, pk, pv = attn.paged_decode_attention(p["attn"], xin, cfg, pk, pv, block_table, pos)
+    x = x + h
+    xin = rmsnorm(p["mlp_norm"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        y, _ = mlps.moe_block(p["moe"], xin[:, None, :], cfg)
+        y = y[:, 0]
+    else:
+        y = mlps.mlp(p["mlp"], xin, cfg)
+    x = x + y
+    x = shard_act(x, "dp", None)
+    return x, pk, pv
+
+
+def _block_decode_chunk_paged(cfg, p: Params, x: jax.Array, pk, pv, block_table, positions):
+    """Chunked decode block against the paged pool: C new tokens per lane.
+
+    Pool-write first (through the block table), then gather the lane's pages
+    back to the dense layout and run the same chunk attention as the dense
+    path — intra-chunk causality falls out of the t <= positions mask exactly
+    as in :func:`_block_decode_chunk`.
+    """
+    xin = rmsnorm(p["attn_norm"], x, cfg.norm_eps)
+    q, k, v = attn.qkv_proj(p["attn"], xin, cfg)
+    from .common import apply_rope
+
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    pk = attn.paged_write(pk, block_table, positions, k)
+    pv = attn.paged_write(pv, block_table, positions, v)
+    ck = attn.gather_pages(pk, block_table)  # (B, T*page, K, hd)
+    cv = attn.gather_pages(pv, block_table)
+    o = _chunk_attention(q, ck, cv, positions, cfg)
+    x = x + attn.out_proj(p["attn"], o, x.dtype)
+    xin = rmsnorm(p["mlp_norm"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        y, _ = mlps.moe_block(p["moe"], xin, cfg)
+    else:
+        y = mlps.mlp(p["mlp"], xin, cfg)
+    x = x + y
+    x = shard_act(x, "dp", None, None)
+    return x, pk, pv
+
+
+def lm_decode_chunk_paged(params: Params, cache: dict, block_table: jax.Array,
+                          tokens: jax.Array, positions: jax.Array, cfg):
+    """Paged twin of :func:`lm_decode_chunk`.
+
+    cache holds the global page pool {"k"/"v": (L, N_pages, page, K, hd)};
+    ``block_table`` (B, T) int32 maps each lane's logical positions to pages
+    (position t -> page ``bt[b, t // page]``, offset ``t % page``).  A
+    position >= T*page is padding: nothing is written and that row's logits
+    are garbage the caller ignores.  Exact vs the dense path: gathering a
+    lane's pages reproduces its dense cache bit-for-bit.
+    """
+    dt = as_dtype(cfg.dtype)
+    x = params["embed"].astype(dt)[tokens]
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model**0.5, dt)
+    x = shard_act(x, "dp", None, None)
+
+    def step(x, inp):
+        lp, pk, pv = inp
+        x, pk, pv = _block_decode_chunk_paged(
+            cfg, shard_params(lp, cfg), x, pk, pv, block_table, positions
+        )
+        return x, (pk, pv)
+
+    if cfg.scan_layers:
+        x, (ks, vs) = jax.lax.scan(step, x, (params["layers"], cache["k"], cache["v"]))
+    else:
+        ks_l, vs_l = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, (pk, pv) = step(x, (lp, cache["k"][i], cache["v"][i]))
+            ks_l.append(pk)
+            vs_l.append(pv)
+        ks, vs = jnp.stack(ks_l), jnp.stack(vs_l)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = lm_logits(params, x, cfg)
+    return logits, {"k": ks, "v": vs}
+
+
+def lm_decode_step_paged(params: Params, cache: dict, block_table: jax.Array,
+                         tokens: jax.Array, pos: jax.Array, cfg):
+    """Paged twin of :func:`lm_decode_step`: one token per lane, KV gathered
+    through the block table.  Lanes with ``pos >= T*page`` (empty slots)
+    write nothing and produce garbage logits the engine ignores."""
+    dt = as_dtype(cfg.dtype)
+    x = params["embed"].astype(dt)[tokens]
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model**0.5, dt)
+    x = shard_act(x, "dp", None)
+
+    def step(x, inp):
+        lp, pk, pv = inp
+        x, pk, pv = _block_decode_paged(
+            cfg, shard_params(lp, cfg), x, pk, pv, block_table, pos
+        )
+        return x, (pk, pv)
+
+    if cfg.scan_layers:
+        x, (ks, vs) = jax.lax.scan(step, x, (params["layers"], cache["k"], cache["v"]))
+    else:
+        ks_l, vs_l = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, (pk, pv) = step(x, (lp, cache["k"][i], cache["v"][i]))
+            ks_l.append(pk)
+            vs_l.append(pv)
+        ks, vs = jnp.stack(ks_l), jnp.stack(vs_l)
+
+    x = rmsnorm(params["final_norm"], x[:, None, :], cfg.norm_eps)
+    logits = lm_logits(params, x, cfg)[:, 0]
+    return logits, {"k": ks, "v": vs}
+
+
 def lm_decode_step(params: Params, cache: dict, tokens: jax.Array, pos: jax.Array, cfg):
     """One decode step.  tokens (B,) int32, pos (B,) int32 -> (logits (B,V), cache)."""
     dt = as_dtype(cfg.dtype)

@@ -1,13 +1,18 @@
-"""Serving substrate: pluggable batched engine.
+"""Serving substrate: pluggable batched engine with paged or dense KV.
 
 ``ServeEngine`` + ``EngineConfig`` drive a fixed slot grid with one compiled
 decode step per tick and chunked batched prefill; admission order is a
 swappable ``Scheduler`` (FCFS / priority / static-batch, or user-supplied);
 ``submit()`` returns a streaming ``Session`` handle; ``EngineMetrics`` emits
-schema-v1 serving records (TTFT, latency percentiles, throughput).
+schema-v1 serving records (TTFT, latency percentiles, throughput).  Setting
+``EngineConfig.page_size`` switches the KV layout from dense per-slot regions
+to a global refcounted page pool (``PageAllocator``) with continuous
+batching, recompute preemption, and copy-on-write shared prefixes
+(``ServeEngine.register_prefix``) — see docs/serving.md.
 """
 from .engine import EngineConfig, ServeEngine
 from .metrics import EngineMetrics
+from .paging import PageAllocator, PagePoolExhausted, SharedPrefix
 from .sampler import greedy, temperature_sample, top_k_sample
 from .scheduler import (
     SCHEDULERS,
@@ -24,11 +29,14 @@ __all__ = [
     "EngineConfig",
     "EngineMetrics",
     "FCFSScheduler",
+    "PageAllocator",
+    "PagePoolExhausted",
     "PriorityScheduler",
     "RequestStats",
     "Scheduler",
     "ServeEngine",
     "Session",
+    "SharedPrefix",
     "StaticBatchScheduler",
     "greedy",
     "make_scheduler",

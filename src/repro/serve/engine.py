@@ -1,13 +1,41 @@
-"""Pluggable batched serving engine.
+"""Pluggable batched serving engine with paged or dense KV.
 
 One compiled fixed-shape decode step serves all slots every tick; admission
 between ticks is delegated to a swappable :class:`~repro.serve.scheduler.
 Scheduler`; prompt ingestion runs as *chunked batched prefill* — one compiled
 ``ModelApi.decode_chunk`` call per chunk, shared across every slot admitted
-that tick — replacing the old per-token Python loop.  Every tick is measured
-into :class:`~repro.serve.metrics.EngineMetrics` and the compiled steps trace
-under the :class:`EngineConfig`'s kernel-policy backend, so one engine
-definition runs the pallas / interpret / xla paths side by side.
+that tick.  Every tick is measured into :class:`~repro.serve.metrics.
+EngineMetrics` and the compiled steps trace under the :class:`EngineConfig`'s
+kernel-policy backend, so one engine definition runs the pallas / interpret /
+xla paths side by side.
+
+Two KV layouts (see ``docs/serving.md`` for the full architecture guide):
+
+- **dense** (``page_size=None``) — each slot reserves a contiguous
+  ``max_len`` KV region; memory is ``n_slots * max_len`` regardless of the
+  actual sequence lengths.
+- **paged** (``page_size=N``) — KV lives in a global pool of fixed-size
+  pages (``repro.models.attention``); each lane holds an ordered page list
+  (its *block table* row) and the host-side
+  :class:`~repro.serve.paging.PageAllocator` tracks ownership.  Admission is
+  page-aware (a request waits when the pool, not the slot grid, is full),
+  finished requests return their pages to the pool the same tick, a lane
+  that outgrows its pages triggers *recompute preemption* of the
+  lowest-priority latest-admitted lane (evicted sessions re-queue and resume
+  exactly, replaying prompt+output through prefill), and prompts sharing a
+  :meth:`ServeEngine.register_prefix` prefix reference the same physical
+  pages copy-on-write — a common system prompt is stored once across every
+  session that shares it.
+
+Correctness invariants the paged path maintains:
+
+- gathering a lane's pages reproduces its dense cache exactly, so paged and
+  dense decode are token-for-token identical for the same requests,
+- a page referenced by more than one owner (another lane or the prefix
+  registry) is never written: forks copy the boundary page before their
+  first write (CoW at page granularity),
+- empty/finished lanes carry the pad position sentinel (``T*page``), which
+  writes nothing — a pad lane can never scribble on a live lane's pages.
 """
 from __future__ import annotations
 
@@ -23,6 +51,7 @@ from repro.kernels.api import BACKENDS, kernel_policy
 from repro.models.api import ModelApi
 
 from .metrics import EngineMetrics
+from .paging import PageAllocator, PagePoolExhausted, SharedPrefix
 from .sampler import greedy
 from .scheduler import Scheduler, make_scheduler
 from .session import (
@@ -32,6 +61,7 @@ from .session import (
     FINISH_MAX_LEN,
     FINISH_MAX_NEW_TOKENS,
     PREFILL,
+    QUEUED,
     Session,
 )
 
@@ -44,11 +74,35 @@ class EngineConfig:
     compiled steps (applied at trace time), so the same engine definition can
     run every kernel path of a model whose config selects kernel-routed
     implementations (``attn_impl="pallas"``, ``ssm_impl="pallas"``).
+
+    Fields:
+
+    - ``n_slots`` — lanes in the compiled batch (the decode step's B).
+    - ``max_len`` — logical cap on prompt+generated length per request.
+    - ``prefill_chunk`` — tokens per compiled prefill step (a smaller chunk
+      interleaves admission with decode sooner; a larger one amortizes
+      dispatch).
+    - ``page_size`` — KV slots per page.  ``None`` selects the dense layout;
+      set it to enable the paged layout described in the module docstring.
+    - ``n_pages`` — page-pool size.  Defaults to
+      ``n_slots * ceil(max_len / page_size)`` (worst case: every lane at
+      ``max_len`` — same memory as dense).  Set it *lower* to oversubscribe
+      slots against real memory: lanes then share the pool and the engine
+      admits/preempts on actual usage.  Must hold at least one worst-case
+      lane (``ceil(max_len / page_size)``).
+    - ``backend`` / ``autotune`` — kernel policy scoped around the engine's
+      compiled steps (``None``: ambient policy).
+    - ``eos_id`` — sampled token that finishes a request early.
+    - ``sampler`` — logits -> token function (greedy default).
+    - ``scheduler`` — stock admission policy name used when no
+      :class:`Scheduler` instance is injected.
     """
 
     n_slots: int
     max_len: int
     prefill_chunk: int = 16  # tokens per compiled prefill step
+    page_size: Optional[int] = None  # None: dense per-slot KV regions
+    n_pages: Optional[int] = None  # pool size (None: worst-case default)
     backend: Optional[str] = None  # kernel_policy backend (None: ambient)
     # kernel_policy autotune for engine steps (None: ambient; bool: forced)
     autotune: Optional[bool] = None
@@ -65,6 +119,25 @@ class EngineConfig:
             raise ValueError("prefill_chunk must be >= 1")
         if self.backend is not None and self.backend not in BACKENDS:
             raise ValueError(f"unknown backend {self.backend!r}; expected {BACKENDS}")
+        if self.page_size is not None and self.page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        if self.n_pages is not None:
+            if self.page_size is None:
+                raise ValueError("n_pages requires page_size (paged mode)")
+            min_pages = -(-self.max_len // self.page_size)
+            if self.n_pages < min_pages:
+                raise ValueError(
+                    f"n_pages={self.n_pages} cannot hold one worst-case lane "
+                    f"(max_len {self.max_len} needs {min_pages} pages of "
+                    f"{self.page_size})"
+                )
+
+    @property
+    def table_width(self) -> int:
+        """Block-table row length: pages needed for one ``max_len`` lane."""
+        if self.page_size is None:
+            raise ValueError("table_width is a paged-mode property")
+        return -(-self.max_len // self.page_size)
 
 
 class ServeEngine:
@@ -73,7 +146,10 @@ class ServeEngine:
     ``scheduler`` accepts any :class:`Scheduler` implementation (defaults to
     the config's named stock policy); ``submit`` returns a streaming
     :class:`Session` handle with per-token callbacks, cancellation, and
-    request stats.
+    request stats.  With ``EngineConfig.page_size`` set, KV is paged (see the
+    module docstring): ``register_prefix`` stores a common prompt prefix
+    once, admission waits on pages rather than failing, and pool exhaustion
+    mid-decode preempts (re-queues) lanes instead of corrupting them.
     """
 
     def __init__(self, model: ModelApi, params, config: EngineConfig,
@@ -85,6 +161,13 @@ class ServeEngine:
                 "shared batch; serving currently targets the attention-cache "
                 "families (dense/moe/vlm)"
             )
+        self.paged = config.page_size is not None
+        if self.paged and (model.decode_step_paged is None
+                           or model.decode_chunk_paged is None):
+            raise NotImplementedError(
+                f"family {model.cfg.family!r} has no paged decode path; "
+                "use page_size=None (dense KV) for this model"
+            )
         self.model = model
         self.params = params
         self.cfg = config
@@ -94,16 +177,40 @@ class ServeEngine:
                 f"scheduler {type(self.scheduler).__name__} does not implement "
                 "the Scheduler protocol (submit/select/pending)"
             )
-        self.metrics = EngineMetrics(config.n_slots)
         self.slots: list = [None] * config.n_slots
         self.finished: list = []
-        self.cache = model.init_cache(config.n_slots, config.max_len)
         self.last_token = jnp.zeros((config.n_slots,), jnp.int32)
-        self.pos = jnp.zeros((config.n_slots,), jnp.int32)
         self._lane_pos = [0] * config.n_slots  # host mirror: next cache index
-        self._decode = self._jit_scoped(model.decode_step)
-        self._chunk = self._jit_scoped(model.decode_chunk)
         self._rid = 0
+        if self.paged:
+            ps = config.page_size
+            self._table_width = config.table_width
+            self.n_pages = (config.n_pages if config.n_pages is not None
+                            else config.n_slots * self._table_width)
+            # pad sentinel: one past the last addressable pool-view slot, so
+            # pad lanes/entries write nothing and mask as "see everything"
+            self._pad_pos = self._table_width * ps
+            self.allocator = PageAllocator(self.n_pages, ps)
+            self.page_tables: list = [[] for _ in range(config.n_slots)]
+            self._bt = np.zeros((config.n_slots, self._table_width), np.int32)
+            self._prefixes: dict = {}  # token tuple -> SharedPrefix
+            self.cache = model.init_paged_cache(self.n_pages, ps)
+            self._decode = self._jit_scoped(model.decode_step_paged)
+            self._chunk = self._jit_scoped(model.decode_chunk_paged)
+            self._copy_page_fn = jax.jit(
+                lambda cache, s, d: jax.tree.map(
+                    lambda a: a.at[:, d].set(a[:, s]), cache
+                )
+            )
+            self.pos = jnp.full((config.n_slots,), self._pad_pos, jnp.int32)
+        else:
+            self.n_pages = 0
+            self._pad_pos = config.max_len
+            self.cache = model.init_cache(config.n_slots, config.max_len)
+            self._decode = self._jit_scoped(model.decode_step)
+            self._chunk = self._jit_scoped(model.decode_chunk)
+            self.pos = jnp.zeros((config.n_slots,), jnp.int32)
+        self.metrics = EngineMetrics(config.n_slots, n_pages=self.n_pages)
 
     # ------------------------------------------------------------------
     def _jit_scoped(self, fn: Callable) -> Callable:
@@ -157,11 +264,174 @@ class ServeEngine:
         session.cancel()
 
     # ------------------------------------------------------------------
+    # shared prefixes (paged mode)
+    # ------------------------------------------------------------------
+    def register_prefix(self, tokens) -> SharedPrefix:
+        """Prefill ``tokens`` once into pool pages shared by every future
+        request whose prompt starts with them (paged mode only).
+
+        The registry holds a permanent reference on the pages, so they
+        survive any individual session; forking sessions re-use the KV for
+        all but (at least) the final prompt token and only prefill their
+        suffix — a common system prompt costs its pages once, not once per
+        lane.  Registration itself runs outside the serving metrics (it is
+        one-time setup, typically before traffic).
+        """
+        if not self.paged:
+            raise ValueError("register_prefix requires paged KV (set page_size)")
+        tokens = tuple(int(t) for t in tokens)
+        if not tokens:
+            raise ValueError("empty prefix")
+        if len(tokens) >= self.cfg.max_len:
+            raise ValueError("prefix must be shorter than max_len")
+        if tokens in self._prefixes:
+            return self._prefixes[tokens]
+        n_t = self.allocator.pages_for(len(tokens))
+        if (not self.allocator.can_alloc(n_t)
+                or self.allocator.free_pages - n_t < self._table_width):
+            raise PagePoolExhausted(
+                f"prefix of {len(tokens)} tokens needs {n_t} pages and the "
+                f"pool must keep {self._table_width} pages of headroom for "
+                f"one worst-case lane ({self.allocator.free_pages} free)"
+            )
+        pages = self.allocator.alloc(n_t)
+        # Prefill the prefix KV through a temporary block-table view: row 0
+        # maps to the prefix pages, every other row is pad (writes nothing,
+        # reads garbage logits nobody samples) — live lanes are untouched
+        # because writes target pool positions, not lanes.
+        ps, chunk = self.cfg.page_size, self.cfg.prefill_chunk
+        bt = self._bt.copy()
+        bt[0, :] = 0
+        bt[0, :n_t] = pages
+        n_chunks = -(-len(tokens) // chunk)
+        toks = np.zeros((self.cfg.n_slots, n_chunks * chunk), np.int32)
+        poss = np.full((self.cfg.n_slots, n_chunks * chunk), self._pad_pos, np.int32)
+        toks[0, : len(tokens)] = tokens
+        poss[0, : len(tokens)] = np.arange(len(tokens), dtype=np.int32)
+        bt_dev = jnp.asarray(bt)
+        for c in range(n_chunks):
+            sl = slice(c * chunk, (c + 1) * chunk)
+            _, self.cache = self._chunk(
+                self.params, self.cache, bt_dev,
+                jnp.asarray(toks[:, sl]), jnp.asarray(poss[:, sl]),
+            )
+        prefix = SharedPrefix(tokens=tokens, pages=pages)
+        self._prefixes[tokens] = prefix
+        return prefix
+
+    def unregister_prefix(self, tokens) -> None:
+        """Drop a registered prefix: the registry's page references are
+        released (pages free once no lane still shares them)."""
+        prefix = self._prefixes.pop(tuple(int(t) for t in tokens))
+        self.allocator.free(prefix.pages)
+
+    def _fork_plan(self, feed: list) -> tuple:
+        """Longest registered prefix under ``feed`` -> (prefix, reuse) where
+        ``reuse`` positions of KV are taken from shared pages instead of
+        being re-prefilled.  At least the final feed token is always re-fed
+        so the fork has a logits row to sample from."""
+        best, reuse = None, 0
+        for prefix in self._prefixes.values():
+            n = min(len(prefix.tokens), len(feed) - 1)
+            if n > reuse and feed[: len(prefix.tokens)] == list(prefix.tokens):
+                best, reuse = prefix, n
+        return best, reuse
+
+    # ------------------------------------------------------------------
+    # paged bookkeeping
+    # ------------------------------------------------------------------
+    def _set_lane_pages(self, lane: int, pages: list) -> None:
+        self.page_tables[lane] = pages
+        self._bt[lane, :] = 0
+        self._bt[lane, : len(pages)] = pages
+
+    def _copy_page(self, src: int, dst: int) -> None:
+        """Device-side page copy (all layers): the CoW step of a fork."""
+        self.cache = self._copy_page_fn(
+            self.cache, jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32)
+        )
+
+    def _release_lane(self, lane: int) -> None:
+        """Return a lane's pages to the pool and pad the lane out."""
+        if self.paged:
+            self.allocator.free(self.page_tables[lane])
+            self._set_lane_pages(lane, [])
+        self.slots[lane] = None
+        self.pos = self.pos.at[lane].set(self._pad_pos if self.paged else 0)
+
+    def _try_admit_paged(self, lane: int, session: Session) -> Optional[tuple]:
+        """Build the lane's page table for ``session`` (sharing a registered
+        prefix when one matches); returns the prefill assignment or None if
+        the pool cannot hold the request right now."""
+        feed = session.prompt + session.out  # out non-empty: preempted resume
+        ps = self.cfg.page_size
+        n_t = self.allocator.pages_for(len(feed))
+        prefix, reuse = self._fork_plan(feed)
+        m = reuse // ps  # fully-shared pages (never written by this lane)
+        cow = reuse % ps != 0  # boundary page: preserved KV + this lane's writes
+        if not self.allocator.can_alloc(n_t - m):
+            return None
+        fresh = self.allocator.alloc(n_t - m)
+        shared = prefix.pages[:m] if prefix is not None else []
+        if shared:
+            self.allocator.share(shared)
+        self._set_lane_pages(lane, shared + fresh)
+        if cow:
+            # copy-on-write: page m holds prefix KV at positions
+            # [m*ps, reuse) that this lane reuses but must not share,
+            # because its own writes start inside the same page
+            self._copy_page(prefix.pages[m], fresh[0])
+        if prefix is not None and reuse:
+            prefix.hits += 1
+            self.metrics.record_prefix_hit(reuse)
+        return (lane, session, feed, reuse if prefix is not None else 0)
+
+    def _pick_victim(self, exclude: int) -> Optional[int]:
+        """Preemption victim: lowest priority, then latest admitted."""
+        candidates = [
+            (s.priority, -(s.stats.admitted_at or 0.0), i)
+            for i, s in enumerate(self.slots)
+            if s is not None and i != exclude
+        ]
+        if not candidates:
+            return None
+        return min(candidates)[2]
+
+    def _preempt(self, lane: int) -> None:
+        """Recompute preemption: evict the lane, free its pages, and
+        re-queue the session.  On re-admission the engine replays
+        prompt+output through prefill, which reconstructs the KV exactly —
+        the stream resumes with no lost or corrupted tokens."""
+        session = self.slots[lane]
+        self._release_lane(lane)
+        session.status = QUEUED
+        session.stats.preemptions += 1
+        self.metrics.record_preemption()
+        self.scheduler.submit(session)
+
+    def _grow_lane(self, lane: int) -> bool:
+        """Ensure the lane owns the page its next KV write lands in,
+        preempting other lanes (or, last resort, this one) when the pool is
+        exhausted.  Returns False if the lane itself was evicted."""
+        ps = self.cfg.page_size
+        while len(self.page_tables[lane]) < self._lane_pos[lane] // ps + 1:
+            while not self.allocator.can_alloc(1):
+                victim = self._pick_victim(exclude=lane)
+                if victim is None:
+                    self._preempt(lane)
+                    return False
+                self._preempt(victim)
+            page = self.allocator.alloc(1)[0]
+            pages = self.page_tables[lane]
+            self._set_lane_pages(lane, pages + [page])
+        return True
+
+    # ------------------------------------------------------------------
     def _finalize(self, lane: int, session: Session, reason: str) -> None:
         session._finish(reason)
         self.metrics.record_finished(session)
         self.finished.append(session)
-        self.slots[lane] = None
+        self._release_lane(lane)
 
     def _finish_reason(self, lane: int, session: Session, token: int) -> str:
         if self.cfg.eos_id is not None and token == self.cfg.eos_id:
@@ -178,6 +448,14 @@ class ServeEngine:
                 self._finalize(i, s, FINISH_CANCELLED)
 
     def _admit(self) -> list:
+        """Claim free slots for scheduler-selected sessions.
+
+        In paged mode admission is additionally page-aware: a selected
+        session that does not fit in the pool right now is re-queued via
+        ``scheduler.submit`` (for the stock policies this re-appends it, so
+        strict arrival order is traded for progress of smaller requests —
+        see docs/serving.md#admission).
+        """
         free = [i for i, s in enumerate(self.slots) if s is None]
         if not free:
             return []
@@ -188,74 +466,104 @@ class ServeEngine:
             )
         now = time.perf_counter()
         assignments = []
-        for lane, session in zip(free, picked):
+        for session in picked:
+            lane = free[0]
+            if self.paged:
+                plan = self._try_admit_paged(lane, session)
+                if plan is None:  # pool full: wait without losing the request
+                    self.scheduler.submit(session)
+                    continue
+            else:
+                plan = (lane, session, session.prompt + session.out, 0)
+            free.pop(0)
             session.status = PREFILL
             session.stats.admitted_at = now
             self.slots[lane] = session
-            assignments.append((lane, session))
+            assignments.append(plan)
         return assignments
 
     # ------------------------------------------------------------------
     def _prefill(self, assignments: list) -> None:
         """Chunked batched prefill: every admitted prompt advances through
         the same compiled ``decode_chunk`` call, ``prefill_chunk`` tokens per
-        step.  Lanes not being prefilled carry the pad position (== max_len),
-        which writes nothing — mid-generation neighbours are untouched."""
+        step.  Lanes not being prefilled carry the pad position sentinel,
+        which writes nothing — mid-generation neighbours are untouched.
+
+        Each assignment is ``(lane, session, feed, start)``: ``feed`` is the
+        token stream whose KV the lane must hold (prompt, plus prior output
+        for preemption resumes) and ``start`` is the first position actually
+        fed — positions below it come from shared prefix pages.
+        """
         t0 = time.perf_counter()
-        n_slots, ml, chunk = self.cfg.n_slots, self.cfg.max_len, self.cfg.prefill_chunk
-        longest = max(len(s.prompt) for _, s in assignments)
+        n_slots, chunk = self.cfg.n_slots, self.cfg.prefill_chunk
+        spans = {lane: len(feed) - start for lane, _, feed, start in assignments}
+        longest = max(spans.values())
         n_chunks = -(-longest // chunk)
         toks = np.zeros((n_slots, n_chunks * chunk), np.int32)
-        poss = np.full((n_slots, n_chunks * chunk), ml, np.int32)
-        for lane, s in assignments:
-            ln = len(s.prompt)
-            toks[lane, :ln] = s.prompt
-            poss[lane, :ln] = np.arange(ln, dtype=np.int32)
+        poss = np.full((n_slots, n_chunks * chunk), self._pad_pos, np.int32)
+        for lane, _, feed, start in assignments:
+            n = len(feed) - start
+            toks[lane, :n] = feed[start:]
+            poss[lane, :n] = np.arange(start, len(feed), dtype=np.int32)
+        bt_args = (jnp.asarray(self._bt),) if self.paged else ()
         for c in range(n_chunks):
             sl = slice(c * chunk, (c + 1) * chunk)
             logits, self.cache = self._chunk(
-                self.params, self.cache, jnp.asarray(toks[:, sl]), jnp.asarray(poss[:, sl])
+                self.params, self.cache, *bt_args,
+                jnp.asarray(toks[:, sl]), jnp.asarray(poss[:, sl]),
             )
             ending = [
-                (lane, s) for lane, s in assignments
-                if c * chunk < len(s.prompt) <= (c + 1) * chunk
+                (lane, s, feed) for lane, s, feed, start in assignments
+                if c * chunk < len(feed) - start <= (c + 1) * chunk
             ]
-            for lane, s in ending:
-                row = logits[lane, len(s.prompt) - 1 - c * chunk]
+            for lane, s, feed in ending:
+                row = logits[lane, spans[lane] - 1 - c * chunk]
                 tok = int(self.cfg.sampler(row))
                 s.status = ACTIVE
                 self.last_token = self.last_token.at[lane].set(tok)
-                self.pos = self.pos.at[lane].set(len(s.prompt))
-                self._lane_pos[lane] = len(s.prompt)
-                s._record_token(tok)  # TTFT stamps here
+                self.pos = self.pos.at[lane].set(len(feed))
+                self._lane_pos[lane] = len(feed)
+                s._record_token(tok)  # TTFT stamps here (first admission only)
                 reason = self._finish_reason(lane, s, tok)
                 if reason:
                     self._finalize(lane, s, reason)
         self.metrics.record_prefill(
-            time.perf_counter() - t0,
-            sum(len(s.prompt) for _, s in assignments),
-            len(assignments),
+            time.perf_counter() - t0, sum(spans.values()), len(assignments)
         )
 
     # ------------------------------------------------------------------
     def step(self) -> None:
-        """One engine tick: release cancellations, admit + prefill, decode."""
+        """One engine tick: release cancellations, admit + prefill, grow
+        pages (preempting if the pool is dry), decode."""
         self._release_cancelled()
         admitted = self._admit()
         if admitted:
             self._prefill(admitted)
+        if self.paged:
+            for lane in range(self.cfg.n_slots):
+                if self.slots[lane] is not None:
+                    self._grow_lane(lane)
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return
         t0 = time.perf_counter()
+        bt_args = (jnp.asarray(self._bt),) if self.paged else ()
         logits, self.cache = self._decode(
-            self.params, self.cache, self.last_token, self.pos
+            self.params, self.cache, *bt_args, self.last_token, self.pos
         )
         next_tok = self.cfg.sampler(logits)
         jax.block_until_ready(next_tok)
         t_decode = time.perf_counter() - t0
         self.last_token = next_tok
-        self.pos = self.pos + 1
+        # pad lanes must stay at the sentinel (a pad-lane write would land in
+        # pool pages someone else owns); active lanes advance by one
+        if self.paged:
+            adv = jnp.zeros((self.cfg.n_slots,), jnp.int32)
+            for i in active:
+                adv = adv.at[i].set(1)
+            self.pos = self.pos + adv
+        else:
+            self.pos = self.pos + 1
         toks = np.asarray(next_tok)
         for i in active:
             s = self.slots[i]
@@ -265,6 +573,8 @@ class ServeEngine:
             if reason:
                 self._finalize(i, s, reason)
         self.metrics.record_tick(time.perf_counter() - t0, t_decode, len(active))
+        if self.paged:
+            self.metrics.record_pages(self.allocator.used)
 
     # ------------------------------------------------------------------
     def has_work(self) -> bool:
@@ -286,5 +596,5 @@ class ServeEngine:
         """Discard accumulated telemetry and the finished list (keeps the
         compiled steps warm) — call after a warm-up pass so one-time
         compilation stays out of the measured TTFT/latency records."""
-        self.metrics = EngineMetrics(self.cfg.n_slots)
+        self.metrics = EngineMetrics(self.cfg.n_slots, n_pages=self.n_pages)
         self.finished = []

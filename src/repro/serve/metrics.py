@@ -1,11 +1,13 @@
 """Engine instrumentation: every tick is measured, every request traced.
 
 The engine feeds :class:`EngineMetrics` wall-clock samples (tick duration,
-prefill-chunk duration, slot occupancy) plus each finished session's
-:class:`~repro.serve.session.RequestStats`; ``summary()`` distills the
-paper-style sustained-load numbers (TTFT, per-token latency percentiles,
-throughput, occupancy) and ``to_records()`` emits them in the schema-v1
-record format the bench subsystem stores and gates.
+prefill-chunk duration, slot occupancy, KV-page-pool occupancy) plus each
+finished session's :class:`~repro.serve.session.RequestStats`; ``summary()``
+distills the paper-style sustained-load numbers (TTFT, per-token latency
+percentiles, throughput, occupancy/concurrency, page occupancy, preemption
+and shared-prefix-hit counts) and ``to_records()`` emits them in the
+schema-v1 record format the bench subsystem stores and gates (the
+``page_occupancy`` row appears only for paged engines).
 """
 from __future__ import annotations
 
@@ -15,10 +17,17 @@ from .session import Session
 
 
 class EngineMetrics:
-    """Accumulates one engine's serving telemetry."""
+    """Accumulates one engine's serving telemetry.
 
-    def __init__(self, n_slots: int):
+    ``n_pages`` is 0 for dense engines; paged engines report page-pool
+    occupancy per tick (:meth:`record_pages`), recompute preemptions
+    (:meth:`record_preemption`), and shared-prefix cache hits
+    (:meth:`record_prefix_hit`) on top of the common tick/request telemetry.
+    """
+
+    def __init__(self, n_slots: int, n_pages: int = 0):
         self.n_slots = n_slots
+        self.n_pages = n_pages  # KV page pool size (0: dense engine)
         self.tick_s: list = []  # full step() wall-clock
         self.decode_s: list = []  # decode-step portion of each tick
         self.occupancy: list = []  # active slots at each decode tick
@@ -30,6 +39,10 @@ class EngineMetrics:
         self.generated_tokens = 0
         self.finished = 0
         self.cancelled = 0
+        self.pages_used: list = []  # pool pages in use at each decode tick
+        self.preemptions = 0  # lanes evicted to free pages
+        self.prefix_hits = 0  # admissions that forked a shared prefix
+        self.prefix_tokens_reused = 0  # prompt tokens NOT re-prefilled
 
     # -- engine hooks ------------------------------------------------------
     def record_tick(self, seconds: float, decode_seconds: float, n_active: int) -> None:
@@ -41,6 +54,16 @@ class EngineMetrics:
         self.prefill_s.append(seconds)
         self.prefill_tokens += n_tokens
         self.prefill_requests += n_requests
+
+    def record_pages(self, pages_in_use: int) -> None:
+        self.pages_used.append(pages_in_use)
+
+    def record_preemption(self) -> None:
+        self.preemptions += 1
+
+    def record_prefix_hit(self, tokens_reused: int) -> None:
+        self.prefix_hits += 1
+        self.prefix_tokens_reused += tokens_reused
 
     def record_finished(self, session: Session) -> None:
         if session.finish_reason == "cancelled":
@@ -62,6 +85,11 @@ class EngineMetrics:
             if self.occupancy
             else 0.0
         )
+        page_occ = (
+            sum(self.pages_used) / (len(self.pages_used) * self.n_pages)
+            if self.pages_used and self.n_pages
+            else 0.0
+        )
         return {
             "requests": self.finished,
             "cancelled": self.cancelled,
@@ -79,6 +107,15 @@ class EngineMetrics:
             "tok_latency_ms_p50": percentile(self.token_latency_s, 50) * 1e3,
             "tok_latency_ms_p95": percentile(self.token_latency_s, 95) * 1e3,
             "occupancy": occ,
+            # mean concurrently-active lanes: the absolute twin of
+            # ``occupancy`` — comparable across engines with different
+            # n_slots (the paged-vs-dense equal-memory contrast)
+            "concurrency": occ * self.n_slots,
+            "page_occupancy": page_occ,
+            "pages_peak": max(self.pages_used, default=0),
+            "preemptions": self.preemptions,
+            "prefix_hits": self.prefix_hits,
+            "prefix_tokens_reused": self.prefix_tokens_reused,
         }
 
     def to_records(self, benchmark: str, prefix: str, x=None) -> list:
@@ -92,7 +129,7 @@ class EngineMetrics:
             "generated_tokens": s["generated_tokens"],
             "ticks": s["ticks"],
         }
-        return [
+        rows = [
             BenchRecord(
                 name=f"{prefix}_ttft",
                 benchmark=benchmark,
@@ -140,4 +177,35 @@ class EngineMetrics:
                 metrics=shared,
                 info=f"mean active slots / {self.n_slots}",
             ),
+            BenchRecord(
+                name=f"{prefix}_concurrency",
+                benchmark=benchmark,
+                x=x,
+                value=s["concurrency"],
+                unit="slots",
+                better="higher",
+                metrics={**shared, "n_slots": self.n_slots},
+                info="mean concurrently-active lanes (absolute slot occupancy)",
+            ),
         ]
+        if self.n_pages:
+            rows.append(
+                BenchRecord(
+                    name=f"{prefix}_page_occupancy",
+                    benchmark=benchmark,
+                    x=x,
+                    value=s["page_occupancy"],
+                    unit="frac",
+                    better="info",
+                    metrics={
+                        **shared,
+                        "n_pages": self.n_pages,
+                        "pages_peak": s["pages_peak"],
+                        "preemptions": s["preemptions"],
+                        "prefix_hits": s["prefix_hits"],
+                        "prefix_tokens_reused": s["prefix_tokens_reused"],
+                    },
+                    info=f"mean KV pages in use / {self.n_pages}",
+                )
+            )
+        return rows

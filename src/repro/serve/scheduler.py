@@ -10,6 +10,13 @@ only the *order* in which queued sessions claim free slots.  Any object with
   within a priority class), still continuous,
 - :class:`StaticBatchScheduler` admit only into an idle engine (classic
   static batching — the measured contrast to continuous admission).
+
+A paged engine also *re-submits* sessions through ``submit``: a selected
+session that does not currently fit in the page pool goes back in the queue,
+and a preempted session re-enters with its partial output attached.  Stock
+policies treat a re-submission like a fresh arrival (appended / re-heaped);
+custom schedulers that care about fairness can inspect
+``session.stats.preemptions`` or ``session.out`` to prioritise resumes.
 """
 from __future__ import annotations
 

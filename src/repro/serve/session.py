@@ -11,6 +11,9 @@ from dataclasses import dataclass, field
 from typing import Callable, Optional
 
 # session lifecycle: QUEUED -> PREFILL -> ACTIVE -> DONE | CANCELLED
+# (a paged engine may preempt an ACTIVE session back to QUEUED; it re-enters
+# PREFILL with its prior output intact and resumes exactly — see
+# ServeEngine._preempt)
 QUEUED = "queued"
 PREFILL = "prefill"
 ACTIVE = "active"
@@ -33,6 +36,7 @@ class RequestStats:
     first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
     token_times: list = field(default_factory=list)
+    preemptions: int = 0  # times evicted (paged pool pressure) and resumed
 
     @property
     def ttft_s(self) -> Optional[float]:

@@ -1,0 +1,313 @@
+"""Paged KV cache: allocator invariants, model-level paged/dense decode
+parity, engine-level token parity across page sizes, shared-prefix
+copy-on-write forks, and pool exhaustion -> clean recompute preemption."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import (
+    EngineConfig,
+    PageAllocator,
+    PagePoolExhausted,
+    ServeEngine,
+)
+
+
+@pytest.fixture(scope="module")
+def gemma():
+    cfg = get_config("gemma-2b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _prompts(cfg, n, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        [int(t) for t in rng.integers(1, cfg.vocab_size, lens[i % len(lens)])]
+        for i in range(n)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# host-side allocator
+# ---------------------------------------------------------------------------
+def test_allocator_alloc_free_roundtrip():
+    a = PageAllocator(n_pages=6, page_size=4)
+    p = a.alloc(4)
+    assert len(p) == len(set(p)) == 4 and a.used == 4 and a.free_pages == 2
+    a.free(p[:2])
+    assert a.used == 2
+    q = a.alloc(3)
+    assert set(q).isdisjoint(p[2:])  # live pages are never re-issued
+    a.free(p[2:] + q)
+    assert a.used == 0 and a.free_pages == 6
+
+
+def test_allocator_exhaustion_is_all_or_nothing():
+    a = PageAllocator(n_pages=3, page_size=2)
+    a.alloc(2)
+    with pytest.raises(PagePoolExhausted):
+        a.alloc(2)
+    assert a.free_pages == 1  # the failed alloc claimed nothing
+
+
+def test_allocator_refcount_share_free():
+    a = PageAllocator(n_pages=4, page_size=2)
+    p = a.alloc(2)
+    a.share(p)
+    assert a.is_shared(p[0]) and a.refcount(p[1]) == 2
+    a.free(p)  # first owner out: pages still held
+    assert a.used == 2 and not a.is_shared(p[0])
+    a.free(p)  # second owner out: pages return
+    assert a.used == 0
+    with pytest.raises(ValueError):
+        a.free(p)  # double free
+
+
+def test_allocator_share_unallocated_rejected():
+    a = PageAllocator(n_pages=2, page_size=2)
+    with pytest.raises(ValueError):
+        a.share([0])
+
+
+def test_allocator_pages_for():
+    a = PageAllocator(n_pages=8, page_size=4)
+    assert [a.pages_for(n) for n in (1, 4, 5, 8, 9)] == [1, 1, 2, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# model level: gathered pages reproduce the dense cache exactly
+# ---------------------------------------------------------------------------
+def test_paged_decode_matches_dense_permuted_pages(gemma):
+    """decode_step/chunk through an arbitrarily permuted page table produce
+    the same logits as the contiguous dense cache for the same tokens."""
+    cfg, model, params = gemma
+    ps, T = 4, 3  # page_size 4, 3 pages per lane -> logical max 12
+    max_len = T * ps
+    bt = np.array([[5, 2, 7], [1, 6, 3]], np.int32)  # 8-page pool, permuted
+    lens = [7, 5]
+    toks = _prompts(cfg, 2, lens, seed=1)
+
+    dense = model.init_cache(2, max_len)
+    paged = model.init_paged_cache(8, ps)
+    for t in range(max(lens)):
+        tk = np.array(
+            [p[t] if t < len(p) else 0 for p in toks], np.int32
+        )
+        pos_d = np.array(
+            [t if t < len(p) else max_len for p in toks], np.int32
+        )
+        pos_p = np.array(
+            [t if t < len(p) else T * ps for p in toks], np.int32
+        )
+        want, dense = model.decode_step(
+            params, dense, jnp.asarray(tk), jnp.asarray(pos_d)
+        )
+        got, paged = model.decode_step_paged(
+            params, paged, jnp.asarray(bt), jnp.asarray(tk), jnp.asarray(pos_p)
+        )
+        for b in range(2):
+            if t < lens[b]:
+                np.testing.assert_allclose(
+                    np.asarray(got[b]), np.asarray(want[b]), rtol=2e-4, atol=2e-4
+                )
+
+
+def test_paged_chunk_matches_dense(gemma):
+    cfg, model, params = gemma
+    ps, T = 4, 2
+    bt = np.array([[3, 0], [2, 1]], np.int32)
+    lens = [6, 4]
+    toks = _prompts(cfg, 2, lens, seed=2)
+    C = max(lens)
+    tk = np.zeros((2, C), np.int32)
+    pos_d = np.full((2, C), T * ps, np.int32)
+    pos_p = np.full((2, C), T * ps, np.int32)
+    for b, p in enumerate(toks):
+        tk[b, : len(p)] = p
+        pos_d[b, : len(p)] = np.arange(len(p))
+        pos_p[b, : len(p)] = np.arange(len(p))
+    dense = model.init_cache(2, T * ps)
+    paged = model.init_paged_cache(4, ps)
+    want, _ = model.decode_chunk(
+        params, dense, jnp.asarray(tk), jnp.asarray(pos_d)
+    )
+    got, _ = model.decode_chunk_paged(
+        params, paged, jnp.asarray(bt), jnp.asarray(tk), jnp.asarray(pos_p)
+    )
+    for b, n in enumerate(lens):
+        np.testing.assert_allclose(
+            np.asarray(got[b, :n]), np.asarray(want[b, :n]), rtol=2e-4, atol=2e-4
+        )
+
+
+def test_pad_sentinel_writes_nothing(gemma):
+    """A lane at the pad position must not touch the pool — otherwise an
+    idle lane would scribble over pages another lane owns via block-table
+    row zeros."""
+    cfg, model, params = gemma
+    ps = 4
+    bt = np.zeros((2, 2), np.int32)  # both rows point at page 0
+    pos = np.array([0, 2 * ps], np.int32)  # lane 1 is pad
+
+    def pool_after(lane1_token):
+        tk = np.array([7, lane1_token], np.int32)
+        _, pool = model.decode_step_paged(
+            params, model.init_paged_cache(2, ps), jnp.asarray(bt),
+            jnp.asarray(tk), jnp.asarray(pos),
+        )
+        return pool
+
+    # pad lane contributes nothing: pool identical whatever token it carries
+    for leaf_a, leaf_b in zip(
+        jax.tree.leaves(pool_after(9)), jax.tree.leaves(pool_after(123))
+    ):
+        np.testing.assert_array_equal(np.asarray(leaf_a), np.asarray(leaf_b))
+
+
+# ---------------------------------------------------------------------------
+# engine level: paged == dense, token for token
+# ---------------------------------------------------------------------------
+def _run_engine(model, params, prompts, *, page_size=None, n_pages=None,
+                n_slots=3, max_len=24, max_new=8):
+    eng = ServeEngine(
+        model, params,
+        EngineConfig(n_slots=n_slots, max_len=max_len, prefill_chunk=4,
+                     page_size=page_size, n_pages=n_pages),
+    )
+    sessions = [eng.submit(p, max_new_tokens=max_new) for p in prompts]
+    eng.run()
+    assert all(s.done for s in sessions)
+    return eng, [s.out for s in sessions]
+
+
+@pytest.mark.parametrize("page_size", [4, 8])
+def test_engine_paged_matches_dense(gemma, page_size):
+    """Same requests through a dense and a paged engine produce identical
+    token streams (greedy decode is deterministic)."""
+    cfg, model, params = gemma
+    prompts = _prompts(cfg, 6, [5, 9, 3, 7, 11, 4], seed=0)
+    _, dense = _run_engine(model, params, prompts)
+    eng, paged = _run_engine(model, params, prompts, page_size=page_size)
+    assert paged == dense
+    assert eng.allocator.used == 0  # all pages returned at drain
+    assert eng.summary()["pages_peak"] > 0
+
+
+def test_engine_page_exhaustion_preempts_cleanly(gemma):
+    """A pool too small for all lanes forces preemption; evicted sessions
+    resume exactly (same tokens as an unconstrained run) and every page is
+    freed at drain — exhaustion degrades throughput, never correctness."""
+    cfg, model, params = gemma
+    prompts = _prompts(cfg, 6, [5, 9, 3, 7, 11, 4], seed=0)
+    _, dense = _run_engine(model, params, prompts)
+    eng, tight = _run_engine(model, params, prompts, page_size=4, n_pages=8)
+    assert tight == dense
+    assert eng.summary()["preemptions"] > 0
+    assert eng.allocator.used == 0
+    assert any(s.stats.preemptions > 0 for s in eng.finished)
+
+
+def test_engine_shared_prefix_fork_identical(gemma):
+    """Forked continuations are bit-identical to full-prefill runs, prefill
+    work drops by the reused tokens, and prefix pages stay resident (the
+    registry's reference) while per-session pages are freed."""
+    cfg, model, params = gemma
+    rng = np.random.default_rng(7)
+    pfx = [int(t) for t in rng.integers(1, cfg.vocab_size, 6)]
+    tails = _prompts(cfg, 4, [4, 2, 5, 3], seed=8)
+    prompts = [pfx + t for t in tails]
+
+    _, plain = _run_engine(model, params, prompts, page_size=4)
+
+    eng = ServeEngine(
+        model, params,
+        EngineConfig(n_slots=3, max_len=24, prefill_chunk=4, page_size=4),
+    )
+    prefix = eng.register_prefix(pfx)
+    sessions = [eng.submit(p, max_new_tokens=8) for p in prompts]
+    eng.run()
+    assert [s.out for s in sessions] == plain
+    s = eng.summary()
+    assert s["prefix_hits"] == len(prompts)
+    assert s["prefix_tokens_reused"] > 0
+    assert prefix.hits == len(prompts)
+    # only the registry's prefix pages remain resident after drain
+    assert eng.allocator.used == len(prefix.pages)
+    eng.unregister_prefix(pfx)
+    assert eng.allocator.used == 0
+
+
+def test_engine_shared_prefix_saves_prefill(gemma):
+    cfg, model, params = gemma
+    rng = np.random.default_rng(9)
+    pfx = [int(t) for t in rng.integers(1, cfg.vocab_size, 8)]
+    prompts = [pfx + t for t in _prompts(cfg, 4, [3, 4], seed=10)]
+
+    def drive(register):
+        eng = ServeEngine(
+            model, params,
+            EngineConfig(n_slots=2, max_len=32, prefill_chunk=4, page_size=4),
+        )
+        if register:
+            eng.register_prefix(pfx)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=6)
+        eng.run()
+        return eng.summary()
+
+    base, forked = drive(False), drive(True)
+    assert forked["prefill_tokens"] < base["prefill_tokens"]
+
+
+def test_engine_prompt_longer_than_prefix_page_boundary(gemma):
+    """CoW boundary case: reuse not page-aligned — the fork copies the
+    boundary page and continues inside it without corrupting the registered
+    prefix for later forks."""
+    cfg, model, params = gemma
+    rng = np.random.default_rng(11)
+    pfx = [int(t) for t in rng.integers(1, cfg.vocab_size, 6)]  # 1.5 pages @ 4
+    prompts = [pfx + t for t in _prompts(cfg, 3, [3, 5, 2], seed=12)]
+    _, plain = _run_engine(model, params, prompts, page_size=4, n_slots=2)
+    eng = ServeEngine(
+        model, params,
+        EngineConfig(n_slots=2, max_len=24, prefill_chunk=4, page_size=4),
+    )
+    eng.register_prefix(pfx)
+    sessions = [eng.submit(p, max_new_tokens=8) for p in prompts]
+    eng.run()
+    assert [s.out for s in sessions] == plain
+
+
+def test_engine_config_validation():
+    with pytest.raises(ValueError, match="page_size"):
+        EngineConfig(n_slots=2, max_len=16, page_size=0)
+    with pytest.raises(ValueError, match="requires page_size"):
+        EngineConfig(n_slots=2, max_len=16, n_pages=8)
+    with pytest.raises(ValueError, match="worst-case lane"):
+        EngineConfig(n_slots=2, max_len=16, page_size=4, n_pages=3)
+    assert EngineConfig(n_slots=2, max_len=16, page_size=4).table_width == 4
+
+
+def test_register_prefix_requires_paged(gemma):
+    cfg, model, params = gemma
+    eng = ServeEngine(model, params, EngineConfig(n_slots=2, max_len=16))
+    with pytest.raises(ValueError, match="paged"):
+        eng.register_prefix([1, 2, 3])
+
+
+def test_register_prefix_keeps_lane_headroom(gemma):
+    """A prefix that would starve the pool (no room left for one worst-case
+    lane) is rejected up front rather than deadlocking admission."""
+    cfg, model, params = gemma
+    eng = ServeEngine(
+        model, params,
+        EngineConfig(n_slots=2, max_len=16, page_size=4, n_pages=4),
+    )
+    with pytest.raises(PagePoolExhausted):
+        eng.register_prefix(list(range(1, 9)))  # 2 pages, leaves 2 < 4 headroom
+    assert eng.allocator.used == 0

@@ -1,0 +1,130 @@
+"""Markdown link checker for the repo's docs (no network).
+
+Walks the given markdown files, extracts inline links/images, and verifies:
+
+- relative file targets exist (resolved against the containing file),
+- ``#anchor`` fragments — same-file or cross-file — match a heading in the
+  target document (GitHub-style slugs),
+- external links (http/https/mailto) are *not* fetched; they are only
+  reported with ``--list-external``.
+
+Exit code 1 on any broken link, with one ``file:line`` diagnostic per issue.
+
+    python tools/check_links.py README.md ROADMAP.md docs/*.md
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+# inline [text](target) — tolerates an optional "title"; ignores images' "!"
+# (same target rules), skips fenced code blocks and inline code spans.
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(\s*<?([^)\s>]+)>?(?:\s+\"[^\"]*\")?\s*\)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor algorithm: strip markup, lowercase, drop everything
+    but word chars/spaces/hyphens, spaces -> hyphens."""
+    text = re.sub(r"`([^`]*)`", r"\1", heading)  # unwrap code spans
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # unwrap links
+    text = text.strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def strip_code(markdown: str, *, unwrap_inline: bool = False) -> str:
+    """Blank out fenced code blocks, and either remove inline code spans
+    (link scanning: example links in snippets aren't real links) or unwrap
+    them (heading scanning: ``repro.bench`` contributes to the slug)."""
+    out, fence = [], None
+    inline = r"\1" if unwrap_inline else ""
+    for line in markdown.splitlines():
+        stripped = line.lstrip()
+        if fence is None and stripped[:3] in ("```", "~~~"):
+            fence = stripped[:3]
+            out.append("")
+            continue
+        if fence is not None:
+            if stripped[:3] == fence:
+                fence = None
+            out.append("")
+            continue
+        out.append(re.sub(r"`([^`]*)`", inline, line))
+    return "\n".join(out)
+
+
+def anchors_of(path: Path, cache: dict) -> set:
+    if path not in cache:
+        slugs: dict[str, int] = {}
+        names = set()
+        text = strip_code(path.read_text(encoding="utf-8"), unwrap_inline=True)
+        for line in text.splitlines():
+            m = HEADING_RE.match(line)
+            if not m:
+                continue
+            slug = github_slug(m.group(2))
+            n = slugs.get(slug, 0)
+            slugs[slug] = n + 1
+            names.add(slug if n == 0 else f"{slug}-{n}")  # GitHub dedup rule
+        cache[path] = names
+    return cache[path]
+
+
+def check_file(path: Path, cache: dict, external: list) -> list:
+    problems = []
+    text = strip_code(path.read_text(encoding="utf-8"))
+    for lineno, line in enumerate(text.splitlines(), 1):
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(EXTERNAL):
+                external.append((path, lineno, target))
+                continue
+            file_part, _, anchor = target.partition("#")
+            dest = path if not file_part else (path.parent / file_part).resolve()
+            if file_part and not dest.exists():
+                problems.append(f"{path}:{lineno}: missing target {target!r}")
+                continue
+            if anchor:
+                if dest.suffix.lower() not in (".md", ".markdown"):
+                    continue  # anchors into non-markdown are out of scope
+                if anchor not in anchors_of(dest, cache):
+                    problems.append(
+                        f"{path}:{lineno}: no heading for anchor "
+                        f"{'#' + anchor!r} in {dest.name}"
+                    )
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="+", type=Path, help="markdown files to check")
+    ap.add_argument("--list-external", action="store_true",
+                    help="print external URLs (never fetched)")
+    args = ap.parse_args(argv)
+
+    cache: dict = {}
+    external: list = []
+    problems: list = []
+    for path in args.files:
+        if not path.exists():
+            problems.append(f"{path}: file not found")
+            continue
+        problems.extend(check_file(path, cache, external))
+
+    for p in problems:
+        print(p, file=sys.stderr)
+    if args.list_external:
+        for path, lineno, url in external:
+            print(f"{path}:{lineno}: external {url}")
+    n_files = sum(1 for p in args.files if p.exists())
+    print(f"checked {n_files} files: {len(problems)} broken link(s), "
+          f"{len(external)} external link(s) skipped")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

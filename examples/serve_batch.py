@@ -4,31 +4,67 @@ request, a priority scheduler, paged KV with a shared system prefix, and
 the engine's serving metrics.
 
     PYTHONPATH=src python examples/serve_batch.py
+
+Scale the same workload out with data-parallel replicas (and, given more
+than one device, tensor-parallel decode per replica — see docs/scaling.md);
+the prefix-affinity router keeps prompts that share the system prefix on
+the replica that holds its pages, and a mid-run replica failure drains and
+resumes its sessions on the survivor:
+
+    PYTHONPATH=src python examples/serve_batch.py --replicas 2 --fail-one
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/serve_batch.py --replicas 2 --tp 2
 """
+import argparse
+
 import jax
 import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serve import EngineConfig, PriorityScheduler, ServeEngine
+from repro.serve import (
+    ROUTERS,
+    ClusterConfig,
+    ClusterRouter,
+    EngineConfig,
+    PriorityScheduler,
+    ServeEngine,
+)
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--replicas", type=int, default=1,
+                    help=">1 serves through a ClusterRouter instead of one engine")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel devices per replica (needs a multi-"
+                         "device jax; force with --xla_force_host_platform_device_count)")
+    ap.add_argument("--router", choices=sorted(ROUTERS), default="prefix_affinity")
+    ap.add_argument("--fail-one", action="store_true",
+                    help="kill replica 0 mid-run to demo drain/requeue "
+                         "(requires --replicas >= 2)")
+    args = ap.parse_args(argv)
+
     cfg = get_config("gemma-2b").reduced()
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
-    engine = ServeEngine(
-        model,
-        params,
-        # paged KV: lanes draw 16-token pages from a shared pool instead of
-        # reserving max_len each; drop page_size for the dense layout
-        EngineConfig(n_slots=4, max_len=96, prefill_chunk=8, page_size=16),
-        scheduler=PriorityScheduler(),
-    )
+    # paged KV: lanes draw 16-token pages from a shared pool instead of
+    # reserving max_len each; drop page_size for the dense layout
+    engine_cfg = EngineConfig(n_slots=4, max_len=96, prefill_chunk=8, page_size=16)
+    clustered = args.replicas > 1 or args.tp > 1
+    if clustered:
+        engine = ClusterRouter(model, params, ClusterConfig(
+            engine=engine_cfg, n_replicas=args.replicas, tp=args.tp,
+            router=args.router))
+    else:
+        engine = ServeEngine(model, params, engine_cfg,
+                             scheduler=PriorityScheduler())
 
     rng = np.random.default_rng(0)
     # a "system prompt" stored once: every request below starts with it and
-    # shares its KV pages copy-on-write instead of re-prefilling them
+    # shares its KV pages copy-on-write instead of re-prefilling them (on a
+    # cluster, the prefix lives on one replica and the prefix_affinity
+    # router sends matching prompts there)
     system = list(rng.integers(1, cfg.vocab_size, 12))
     engine.register_prefix(system)
     for i in range(10):
@@ -44,20 +80,34 @@ def main():
         on_token=lambda sess, tok: streamed.append(tok),
     )
 
+    if args.fail_one:
+        if args.replicas < 2:
+            raise SystemExit("--fail-one requires --replicas >= 2")
+        for _ in range(3):  # let some sessions get mid-decode first
+            engine.step()
+        requeued = engine.fail_replica(0)
+        print(f"failed replica 0: {len(requeued)} session(s) requeued "
+              f"with output intact")
+
     finished = engine.run()
     s = engine.summary()
+    if clustered:
+        print(f"cluster: {s['replicas']} replica(s) x tp={s['tp']} "
+              f"({args.router}), {s['failures']} failure(s)")
     print(
         f"served {len(finished)} requests / {s['generated_tokens']} tokens "
         f"in {s['total_s']:.2f}s ({s['throughput_tok_s']:.1f} tok/s, "
         f"ttft {s['ttft_ms_mean']:.0f}ms, occupancy {s['occupancy']:.0%})"
     )
     print(f"streamed request got {len(streamed)} tokens via callback: {streamed}")
+    n_pages = (sum(r.engine.n_pages for r in engine.replicas) if clustered
+               else engine.n_pages)
     print(
-        f"paged KV: peak {s['pages_peak']}/{engine.n_pages} pages, "
+        f"paged KV: peak {s['pages_peak']}/{n_pages} pages, "
         f"{s['prefix_tokens_reused']} system-prompt tokens reused across "
         f"{s['prefix_hits']} requests"
     )
-    for sess in finished:
+    for sess in sorted(finished, key=lambda x: x.rid):
         print(
             f"  req {sess.rid} prio {sess.priority} [{sess.finish_reason}]: "
             f"prompt[{len(sess.prompt)}] -> {sess.out}"

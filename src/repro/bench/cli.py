@@ -1,23 +1,28 @@
-"""``python -m repro.bench`` — run | list | compare | baseline.
+"""``python -m repro.bench`` — run | list | compare | baseline | trend.
 
     run       execute registered benchmarks, write schema-versioned JSON
     list      show registered benchmarks with paper refs and sweep grids
     compare   gate a results file against the checked-in baselines
     baseline  (re)generate baseline files from a results file
+    trend     aggregate per-commit BENCH_<sha>.json artifacts into a
+              perf-over-time report (markdown or JSON)
 
 Exit codes: ``run`` is non-zero if any benchmark errored; ``compare`` is
-non-zero if the gate fails (unless ``--warn-only``).
+non-zero if the gate fails (unless ``--warn-only``); ``trend`` is non-zero
+only on input errors (it reports, it does not gate).
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
+from pathlib import Path
 
 from repro.core import registry
 
 from . import baseline as bl
 from . import runner
+from . import trend as trend_mod
 from .schema import BenchResult, SchemaError
 
 
@@ -101,6 +106,33 @@ def _cmd_baseline(args) -> int:
     return 0
 
 
+def _cmd_trend(args) -> int:
+    files = trend_mod.discover(args.paths)
+    if not files:
+        print(
+            f"error: no BENCH_*.json files under {' '.join(args.paths)}",
+            file=sys.stderr,
+        )
+        return 2
+    commits = trend_mod.load_commits(files)
+    report = trend_mod.build_trend(commits, benchmarks=args.benchmark)
+    rendered = (
+        trend_mod.format_json(report) if args.json
+        else trend_mod.format_markdown(report)
+    )
+    if args.out:
+        Path(args.out).write_text(
+            rendered if rendered.endswith("\n") else rendered + "\n"
+        )
+        print(
+            f"wrote {args.out}: {len(report['series'])} series over "
+            f"{len(report['commits'])} commit(s)"
+        )
+    else:
+        print(rendered, end="" if rendered.endswith("\n") else "\n")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.bench", description=__doc__)
     sub = ap.add_subparsers(dest="cmd", required=True)
@@ -136,6 +168,21 @@ def main(argv=None) -> int:
     p.add_argument("results")
     p.add_argument("--out-dir", default="benchmarks/baselines")
     p.set_defaults(fn=_cmd_baseline)
+
+    p = sub.add_parser(
+        "trend", help="aggregate per-commit BENCH_<sha>.json into a report"
+    )
+    p.add_argument(
+        "paths", nargs="+",
+        help="directories (scanned for BENCH_*.json) and/or result files",
+    )
+    p.add_argument(
+        "--benchmark", nargs="*",
+        help="benchmark/record-name prefixes to include (default: all)",
+    )
+    p.add_argument("--json", action="store_true", help="emit JSON instead of markdown")
+    p.add_argument("--out", help="write the report to this path")
+    p.set_defaults(fn=_cmd_trend)
 
     args = ap.parse_args(argv)
     try:

@@ -14,6 +14,7 @@ Paper map (table/figure -> registered name):
     Fig 4.3-4.5        throttle    power/thermal clock governor
     Ch. 3+4 (whole)    dissect     probe suite -> fitted HardwareModel
     Ch. 1 + Fig 4.3    serving     engine TTFT/latency/throughput sweep
+    Ch. 1 (scale-out)  serving_scaled  cluster sweep over tp x replicas
 """
 from . import (  # noqa: F401  (import side effect: registration)
     atomics,
@@ -25,5 +26,6 @@ from . import (  # noqa: F401  (import side effect: registration)
     memhier,
     scheduler,
     serving,
+    serving_scaled,
     throttle,
 )

@@ -117,6 +117,19 @@ class ModelConfig:
         """Whether the arch can run the long_500k cell (SSM / hybrid)."""
         return self.family in ("ssm", "hybrid")
 
+    def max_useful_tp(self, limit: int = 1 << 30) -> int:
+        """Largest tensor-parallel degree (<= ``limit``) that actually
+        shards attention: it must divide both ``n_heads`` (wq/wo) and
+        ``n_kv_heads`` (wk/wv and the KV cache).  Beyond this the
+        divisibility-guarded sharding rules leave those weights replicated,
+        so extra devices add communication without splitting the work —
+        ``ClusterConfig.tp`` should not exceed it (see docs/scaling.md)."""
+        tp = 1
+        for d in range(1, min(self.n_heads, limit) + 1):
+            if self.n_heads % d == 0 and self.n_kv_heads % d == 0:
+                tp = d
+        return tp
+
     @property
     def has_decoder(self) -> bool:
         return True  # all assigned archs decode (whisper is enc-dec, not enc-only)

@@ -205,6 +205,25 @@ def cache_shardings(cache, cfg, mesh: Mesh):
     return jax.tree.map(one, cache)
 
 
+def paged_cache_shardings(cache, cfg, mesh: Mesh):
+    """Paged KV-pool sharding: KV heads on ``model`` when divisible.
+
+    Pool leaves are (L, N_pages, page, K, hd).  The page dim stays
+    replicated on purpose — block tables address pages randomly, so sharding
+    pages would turn every ``gather_pages`` into a cross-device gather; the
+    tensor-parallel axis for decode is the KV-head dim, matching the
+    head-sharded wk/wv that produce the entries.
+    """
+
+    def one(leaf):
+        axes = [None] * leaf.ndim
+        if leaf.ndim == 5 and leaf.shape[3] == getattr(cfg, "n_kv_heads", -1):
+            axes[3] = "model" if "model" in mesh.shape else None
+        return NamedSharding(mesh, _guarded_spec(mesh, leaf.shape, tuple(axes)))
+
+    return jax.tree.map(one, cache)
+
+
 def logits_sharding(global_batch: int, vocab_size: int, mesh: Mesh) -> NamedSharding:
     """Output-logits sharding: batch-dim dp, vocab gathered for sampling.
 

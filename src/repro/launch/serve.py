@@ -7,6 +7,13 @@ Paged KV + shared prefix (see docs/serving.md):
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
         --requests 8 --slots 6 --page-size 16 --n-pages 48 --shared-prefix 12
+
+Cluster scale-out (see docs/scaling.md) — data-parallel replicas, optional
+tensor-parallel decode per replica (``--tp > 1`` wants multiple devices;
+force fake ones with XLA_FLAGS=--xla_force_host_platform_device_count=8):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
+        --requests 12 --replicas 2 --tp 2 --router least_loaded
 """
 from __future__ import annotations
 
@@ -17,7 +24,15 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serve import SCHEDULERS, EngineConfig, ServeEngine
+from repro.serve import (
+    ROUTERS,
+    SCHEDULERS,
+    ClusterConfig,
+    ClusterRouter,
+    EngineConfig,
+    ServeEngine,
+    UnsupportedFamilyError,
+)
 
 
 def main(argv=None):
@@ -45,6 +60,14 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel engine replicas behind one router "
+                         "(>1 selects the ClusterRouter path)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree per replica (devices per "
+                         "engine mesh; >1 selects the ClusterRouter path)")
+    ap.add_argument("--router", choices=sorted(ROUTERS), default="least_loaded",
+                    help="replica placement policy (cluster path only)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -52,25 +75,32 @@ def main(argv=None):
         cfg = cfg.reduced()
 
     model = build_model(cfg)
-    if model.decode_chunk is None:
-        raise SystemExit(
-            f"serve driver targets attention-cache archs (dense/moe/vlm); "
-            f"{args.arch} is family {cfg.family!r}"
-        )
     params = model.init(jax.random.key(args.seed))
-    engine = ServeEngine(
-        model,
-        params,
-        EngineConfig(
-            n_slots=args.slots,
-            max_len=args.max_len,
-            prefill_chunk=args.prefill_chunk,
-            page_size=args.page_size,
-            n_pages=args.n_pages,
-            backend=args.backend,
-            scheduler=args.scheduler,
-        ),
+    engine_cfg = EngineConfig(
+        n_slots=args.slots,
+        max_len=args.max_len,
+        prefill_chunk=args.prefill_chunk,
+        page_size=args.page_size,
+        n_pages=args.n_pages,
+        backend=args.backend,
+        scheduler=args.scheduler,
     )
+    clustered = args.replicas > 1 or args.tp > 1
+    if args.tp > cfg.max_useful_tp():
+        print(
+            f"note: --tp {args.tp} exceeds {args.arch}'s max useful TP "
+            f"{cfg.max_useful_tp()} (n_heads={cfg.n_heads}, "
+            f"n_kv_heads={cfg.n_kv_heads}); extra devices stay replicated"
+        )
+    try:
+        if clustered:
+            engine = ClusterRouter(model, params, ClusterConfig(
+                engine=engine_cfg, n_replicas=args.replicas, tp=args.tp,
+                router=args.router))
+        else:
+            engine = ServeEngine(model, params, engine_cfg)
+    except UnsupportedFamilyError as e:
+        raise SystemExit(str(e)) from None
 
     rng = np.random.default_rng(args.seed)
     prefix = []
@@ -79,16 +109,26 @@ def main(argv=None):
             raise SystemExit("--shared-prefix requires --page-size (paged KV)")
         prefix = [int(t) for t in rng.integers(1, cfg.vocab_size, args.shared_prefix)]
         engine.register_prefix(prefix)
-    sessions = [
-        engine.submit(
-            prefix + list(rng.integers(1, cfg.vocab_size, args.prompt_len)),
-            args.max_new,
-            priority=i % 3,  # exercise the priority axis under --scheduler priority
-        )
-        for i in range(args.requests)
-    ]
+    try:
+        sessions = [
+            engine.submit(
+                prefix + list(rng.integers(1, cfg.vocab_size, args.prompt_len)),
+                args.max_new,
+                priority=i % 3,  # exercise the priority axis under --scheduler priority
+            )
+            for i in range(args.requests)
+        ]
+    except UnsupportedFamilyError as e:  # cluster replicas build lazily here
+        raise SystemExit(str(e)) from None
     finished = engine.run()
     s = engine.summary()
+    if clustered:
+        per = s["per_replica"]
+        print(
+            f"cluster: {s['replicas']} replica(s) x tp={s['tp']} "
+            f"({args.router}); requests per replica: "
+            f"{[r['requests'] for r in per]}"
+        )
     print(
         f"served {len(finished)}/{len(sessions)} requests, "
         f"{s['generated_tokens']} tokens in {s['total_s']:.2f}s "
@@ -100,8 +140,10 @@ def main(argv=None):
         f"{s['tok_latency_ms_p95']:.2f}ms; occupancy {s['occupancy']:.0%}"
     )
     if args.page_size is not None:
+        n_pages = (sum(r.engine.n_pages for r in engine.replicas) if clustered
+                   else engine.n_pages)
         print(
-            f"paged KV: {engine.n_pages} pages x {args.page_size} slots, "
+            f"paged KV: {n_pages} pages x {args.page_size} slots, "
             f"peak {s['pages_peak']} used ({s['page_occupancy']:.0%} mean), "
             f"{s['preemptions']} preemptions, "
             f"{s['prefix_tokens_reused']} prefix tokens reused "

@@ -80,14 +80,36 @@ class ModelApi:
     decode_step_paged: Optional[Callable] = None
     # (params, cache, block_table, tokens (B,C), positions (B,C)) -> (logits, cache)
     decode_chunk_paged: Optional[Callable] = None
+    # Mesh placement for the caches (tensor-parallel serving).  Both take
+    # (cache_or_specs, mesh) and return a matching NamedSharding tree derived
+    # from the ``repro.dist.sharding`` rules: dense caches put batch on the
+    # dp axes and KV heads on ``model``; paged pools shard only the KV-head
+    # dim (pages are block-table-addressed and stay replicated).  Divisibility
+    # guards apply — a dim that doesn't divide its mesh axis is replicated.
+    cache_shardings: Optional[Callable] = None
+    paged_cache_shardings: Optional[Callable] = None
 
 
 def _cache_dtype(cfg):
     return jnp.bfloat16 if cfg.dtype == "bfloat16" else as_dtype(cfg.dtype)
 
 
+def _cache_sharding_fns(cfg):
+    """(dense, paged) cache-placement closures over the dist.sharding rules."""
+    from repro.dist import sharding as dist_sharding
+
+    def dense(cache, mesh):
+        return dist_sharding.cache_shardings(cache, cfg, mesh)
+
+    def paged(cache, mesh):
+        return dist_sharding.paged_cache_shardings(cache, cfg, mesh)
+
+    return dense, paged
+
+
 def build_model(cfg: ModelConfig) -> ModelApi:
     fam = cfg.family
+    dense_cache_shardings, pool_cache_shardings = _cache_sharding_fns(cfg)
 
     if fam in ("dense", "moe", "vlm"):
 
@@ -147,6 +169,8 @@ def build_model(cfg: ModelConfig) -> ModelApi:
             paged_cache_specs=paged_cache_specs,
             decode_step_paged=decode_step_paged,
             decode_chunk_paged=decode_chunk_paged,
+            cache_shardings=dense_cache_shardings,
+            paged_cache_shardings=pool_cache_shardings,
         )
 
     if fam == "ssm":  # xlstm
@@ -172,6 +196,7 @@ def build_model(cfg: ModelConfig) -> ModelApi:
             decode_step,
             lambda b, ml: xlstm.xlstm_init_cache(cfg, b, ml),
             lambda b, ml: xlstm.xlstm_cache_specs(cfg, b, ml),
+            cache_shardings=dense_cache_shardings,
         )
 
     if fam == "hybrid":  # zamba2
@@ -194,6 +219,7 @@ def build_model(cfg: ModelConfig) -> ModelApi:
             decode_step,
             lambda b, ml: mamba.zamba_init_cache(cfg, b, ml, _cache_dtype(cfg)),
             lambda b, ml: mamba.zamba_cache_specs(cfg, b, ml, _cache_dtype(cfg)),
+            cache_shardings=dense_cache_shardings,
         )
 
     if fam == "encdec":  # whisper
@@ -216,6 +242,7 @@ def build_model(cfg: ModelConfig) -> ModelApi:
             decode_step,
             lambda b, ml: encdec.encdec_init_cache(cfg, b, ml, _cache_dtype(cfg)),
             lambda b, ml: encdec.encdec_cache_specs(cfg, b, ml, _cache_dtype(cfg)),
+            cache_shardings=dense_cache_shardings,
         )
 
     raise ValueError(f"unknown family {fam!r}")

@@ -9,9 +9,32 @@ schema-v1 serving records (TTFT, latency percentiles, throughput).  Setting
 to a global refcounted page pool (``PageAllocator``) with continuous
 batching, recompute preemption, and copy-on-write shared prefixes
 (``ServeEngine.register_prefix``) — see docs/serving.md.
+
+``ClusterRouter`` + ``ClusterConfig`` scale the same surface out: optional
+tensor-parallel decode inside each engine (``EngineConfig.mesh`` /
+``ClusterConfig.tp``) and a data-parallel replica router with pluggable
+placement policies, pooled ``ClusterMetrics``, and replica-failure
+drain/requeue — see docs/scaling.md.
 """
-from .engine import EngineConfig, ServeEngine
-from .metrics import EngineMetrics
+from .cluster import (
+    ROUTERS,
+    ClusterConfig,
+    ClusterRouter,
+    LeastLoadedPolicy,
+    PrefixAffinityPolicy,
+    Replica,
+    RoundRobinPolicy,
+    RouterPolicy,
+    make_router,
+    replica_meshes,
+)
+from .engine import (
+    SERVABLE_FAMILIES,
+    EngineConfig,
+    ServeEngine,
+    UnsupportedFamilyError,
+)
+from .metrics import ClusterMetrics, EngineMetrics
 from .paging import PageAllocator, PagePoolExhausted, SharedPrefix
 from .sampler import greedy, temperature_sample, top_k_sample
 from .scheduler import (
@@ -25,21 +48,34 @@ from .scheduler import (
 from .session import RequestStats, Session
 
 __all__ = [
+    "ROUTERS",
     "SCHEDULERS",
+    "SERVABLE_FAMILIES",
+    "ClusterConfig",
+    "ClusterMetrics",
+    "ClusterRouter",
     "EngineConfig",
     "EngineMetrics",
     "FCFSScheduler",
+    "LeastLoadedPolicy",
     "PageAllocator",
     "PagePoolExhausted",
+    "PrefixAffinityPolicy",
     "PriorityScheduler",
+    "Replica",
     "RequestStats",
+    "RoundRobinPolicy",
+    "RouterPolicy",
     "Scheduler",
     "ServeEngine",
     "Session",
     "SharedPrefix",
     "StaticBatchScheduler",
+    "UnsupportedFamilyError",
     "greedy",
+    "make_router",
     "make_scheduler",
+    "replica_meshes",
     "temperature_sample",
     "top_k_sample",
 ]

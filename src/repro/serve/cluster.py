@@ -1,0 +1,406 @@
+"""Sharded serving cluster: replica router over tensor-parallel engines.
+
+Two axes of scale-out, composed (see ``docs/scaling.md`` for the topology
+guide):
+
+- **Tensor parallel (inside one engine)** — each replica's
+  :class:`~repro.serve.engine.ServeEngine` gets its own
+  :class:`jax.sharding.Mesh` with a ``model`` axis of ``tp`` devices; the
+  ``dist.sharding`` rules shard the params (head-sharded wq/wk/wv,
+  row-parallel wo, vocab-sharded embed/lm_head) and the KV/page cache
+  (KV-head dim), and the compiled decode/prefill steps trace inside
+  ``activation_sharding(mesh)``.  Sharded decode is token-identical to the
+  single-device engine.
+- **Data parallel (across engines)** — :class:`ClusterRouter` owns
+  ``n_replicas`` engines, each on its own device subset, behind the same
+  ``submit() -> Session`` API as a single engine.  A pluggable
+  :class:`RouterPolicy` picks the replica per request (least-loaded by
+  default; round-robin; prefix-affinity that follows registered shared
+  prefixes), per-replica :class:`~repro.serve.metrics.EngineMetrics` roll up
+  into one :class:`~repro.serve.metrics.ClusterMetrics` summary, and
+  :meth:`ClusterRouter.fail_replica` simulates a replica loss: the failed
+  engine drains, and every in-flight/queued session re-queues onto the
+  survivors with its generated output intact (the recompute-preemption
+  invariant makes the resume token-exact).
+
+Replicas are built lazily on first use, so a model family the engine cannot
+serve surfaces its typed :class:`~repro.serve.engine.UnsupportedFamilyError`
+at ``submit()`` time — the first call a caller actually makes — rather than
+at router construction.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, replace
+from typing import Optional, Protocol, Sequence, runtime_checkable
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.models.api import ModelApi
+
+from .engine import EngineConfig, ServeEngine
+from .metrics import ClusterMetrics
+from .paging import SharedPrefix
+from .session import Session
+
+
+# ---------------------------------------------------------------------------
+# device topology
+# ---------------------------------------------------------------------------
+def replica_meshes(n_replicas: int, tp: int = 1, devices=None) -> list:
+    """One tensor-parallel mesh per replica over the available devices.
+
+    Each mesh is 1-D with a ``model`` axis of ``tp`` devices.  Replicas take
+    disjoint device subsets when ``n_replicas * tp`` fits; otherwise they
+    wrap around and share devices (useful for in-process simulation on small
+    hosts — throughput is then nominal, correctness is not affected).  With
+    ``tp == 1`` on a single-device host the meshes are ``None`` and replicas
+    are plain unsharded engines.
+    """
+    if n_replicas < 1:
+        raise ValueError("n_replicas must be >= 1")
+    if tp < 1:
+        raise ValueError("tp must be >= 1")
+    devices = list(jax.devices()) if devices is None else list(devices)
+    if tp > len(devices):
+        raise ValueError(
+            f"tensor-parallel degree {tp} needs {tp} devices, "
+            f"have {len(devices)}"
+        )
+    if tp == 1 and len(devices) == 1:
+        return [None] * n_replicas
+    meshes = []
+    for r in range(n_replicas):
+        devs = [devices[(r * tp + i) % len(devices)] for i in range(tp)]
+        meshes.append(Mesh(np.array(devs), ("model",)))
+    return meshes
+
+
+# ---------------------------------------------------------------------------
+# replicas
+# ---------------------------------------------------------------------------
+@dataclass
+class Replica:
+    """One data-parallel member: an engine pinned to a device subset."""
+
+    index: int
+    engine: ServeEngine
+    mesh: Optional[Mesh] = None
+    alive: bool = True
+
+    def load(self) -> int:
+        """Routing load: occupied slots plus queued sessions."""
+        active = sum(s is not None for s in self.engine.slots)
+        return active + self.engine.scheduler.pending()
+
+    def has_work(self) -> bool:
+        return self.alive and self.engine.has_work()
+
+
+# ---------------------------------------------------------------------------
+# routing policies
+# ---------------------------------------------------------------------------
+@runtime_checkable
+class RouterPolicy(Protocol):
+    """Replica selection: which live replica serves the next request.
+
+    ``place`` must return the index of an *alive* replica (the router
+    guarantees at least one exists when it calls).  Policies may also
+    implement two optional hooks the router invokes when present:
+    ``note_prefix(tokens, index)`` after a shared prefix is registered on a
+    replica, and ``forget_replica(index)`` when a replica fails.
+    """
+
+    def place(self, prompt: Sequence[int], priority: int,
+              replicas: Sequence[Replica]) -> int:
+        ...
+
+
+class RoundRobinPolicy:
+    """Cycle through live replicas in index order."""
+
+    def __init__(self):
+        self._next = 0
+
+    def place(self, prompt, priority, replicas) -> int:
+        for _ in range(len(replicas)):
+            idx = self._next % len(replicas)
+            self._next += 1
+            if replicas[idx].alive:
+                return idx
+        raise RuntimeError("no live replicas")
+
+    def __repr__(self):
+        return "RoundRobinPolicy()"
+
+
+class LeastLoadedPolicy:
+    """Fewest occupied slots + queued sessions wins (ties: lowest index)."""
+
+    def place(self, prompt, priority, replicas) -> int:
+        live = [r for r in replicas if r.alive]
+        if not live:
+            raise RuntimeError("no live replicas")
+        return min(live, key=lambda r: (r.load(), r.index)).index
+
+    def __repr__(self):
+        return f"{type(self).__name__}()"
+
+
+class PrefixAffinityPolicy(LeastLoadedPolicy):
+    """Follow shared prefixes: a prompt that extends a registered prefix
+    routes to the replica holding that prefix's pages (longest match wins),
+    so the copy-on-write fork actually fires instead of re-prefilling on a
+    replica that never saw the prefix.  Everything else falls back to
+    least-loaded."""
+
+    def __init__(self):
+        self._owners: dict = {}  # prefix token tuple -> replica index
+
+    def note_prefix(self, tokens, index: int) -> None:
+        self._owners[tuple(int(t) for t in tokens)] = index
+
+    def forget_replica(self, index: int) -> None:
+        self._owners = {t: i for t, i in self._owners.items() if i != index}
+
+    def place(self, prompt, priority, replicas) -> int:
+        prompt = tuple(int(t) for t in prompt)
+        best, best_len = None, 0
+        for tokens, idx in self._owners.items():
+            if (len(tokens) > best_len and len(tokens) < len(prompt)
+                    and prompt[: len(tokens)] == tokens
+                    and replicas[idx].alive):
+                best, best_len = idx, len(tokens)
+        if best is not None:
+            return best
+        return super().place(prompt, priority, replicas)
+
+
+ROUTERS = {
+    "round_robin": RoundRobinPolicy,
+    "least_loaded": LeastLoadedPolicy,
+    "prefix_affinity": PrefixAffinityPolicy,
+}
+
+
+def make_router(name: str) -> RouterPolicy:
+    try:
+        return ROUTERS[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown router {name!r}; registered: {sorted(ROUTERS)}"
+        ) from None
+
+
+# ---------------------------------------------------------------------------
+# cluster
+# ---------------------------------------------------------------------------
+#: rid stride per replica: engine-local rids stay unique cluster-wide.
+_RID_STRIDE = 10**6
+
+
+@dataclass(frozen=True)
+class ClusterConfig:
+    """Cluster-level knobs wrapped around one :class:`EngineConfig`.
+
+    ``engine`` is the per-replica template — its ``mesh`` must be unset
+    (the cluster owns device placement: each replica gets a ``tp``-device
+    ``model``-axis mesh from :func:`replica_meshes`).  ``devices`` limits
+    the device pool (default: all of ``jax.devices()``).
+    """
+
+    engine: EngineConfig
+    n_replicas: int = 1
+    tp: int = 1  # tensor-parallel degree inside each replica
+    router: str = "least_loaded"  # policy name used when none is injected
+    devices: Optional[tuple] = None  # device pool (None: jax.devices())
+
+    def __post_init__(self):
+        if self.n_replicas < 1:
+            raise ValueError("n_replicas must be >= 1")
+        if self.tp < 1:
+            raise ValueError("tp must be >= 1")
+        if self.router not in ROUTERS:
+            raise ValueError(
+                f"unknown router {self.router!r}; registered: {sorted(ROUTERS)}"
+            )
+        if self.engine.mesh is not None:
+            raise ValueError(
+                "ClusterConfig owns device placement; leave EngineConfig.mesh "
+                "unset (set ClusterConfig.tp for tensor parallelism)"
+            )
+
+
+class ClusterRouter:
+    """Data-parallel front door: N engine replicas behind one ``submit``.
+
+    The router exposes the single-engine surface — ``submit`` /
+    ``register_prefix`` / ``step`` / ``run`` / ``summary`` — and fans it out
+    over replicas via the configured :class:`RouterPolicy`.  Replicas are
+    constructed lazily on first use; an unservable model family therefore
+    raises :class:`UnsupportedFamilyError` from ``submit()``, naming the
+    family and the dense fallback.
+
+    In-process, ``step()`` advances every live replica one tick (replicas
+    step sequentially, so cluster wall-clock — not summed engine time — is
+    the throughput denominator; :class:`ClusterMetrics` handles that).
+    """
+
+    def __init__(self, model: ModelApi, params, config: ClusterConfig,
+                 policy: Optional[RouterPolicy] = None):
+        self.model = model
+        self.params = params
+        self.cfg = config
+        self.policy = policy if policy is not None else make_router(config.router)
+        if not isinstance(self.policy, RouterPolicy):
+            raise TypeError(
+                f"policy {type(self.policy).__name__} does not implement "
+                "the RouterPolicy protocol (place)"
+            )
+        self.replicas: list = []  # built lazily by _ensure_replicas
+        self.metrics = ClusterMetrics()
+        self._placement: dict = {}  # session rid -> replica index
+
+    # -- lifecycle ---------------------------------------------------------
+    def _ensure_replicas(self) -> None:
+        if self.replicas:
+            return
+        meshes = replica_meshes(
+            self.cfg.n_replicas, self.cfg.tp,
+            list(self.cfg.devices) if self.cfg.devices is not None else None,
+        )
+        for i, mesh in enumerate(meshes):
+            engine = ServeEngine(
+                self.model, self.params, replace(self.cfg.engine, mesh=mesh)
+            )
+            engine._rid = i * _RID_STRIDE  # cluster-unique session rids
+            self.replicas.append(Replica(index=i, engine=engine, mesh=mesh))
+
+    def _live(self) -> list:
+        live = [r for r in self.replicas if r.alive]
+        if not live:
+            raise RuntimeError(
+                "no live replicas (all failed); cannot place the request"
+            )
+        return live
+
+    # -- the engine-shaped surface -----------------------------------------
+    def submit(self, prompt, max_new_tokens: int, *, priority: int = 0,
+               on_token=None) -> Session:
+        """Route a request to a replica; returns its :class:`Session`."""
+        self._ensure_replicas()  # UnsupportedFamilyError surfaces here
+        self._live()
+        idx = self.policy.place([int(t) for t in prompt], priority, self.replicas)
+        if not self.replicas[idx].alive:
+            raise RuntimeError(f"policy placed request on dead replica {idx}")
+        session = self.replicas[idx].engine.submit(
+            prompt, max_new_tokens, priority=priority, on_token=on_token
+        )
+        self._placement[session.rid] = idx
+        self.metrics.record_route()
+        return session
+
+    def register_prefix(self, tokens, replica: Optional[int] = None) -> SharedPrefix:
+        """Register a shared prompt prefix on one replica (paged mode).
+
+        The owning replica is ``replica`` when given, else the least-loaded
+        live one.  Policies with a ``note_prefix`` hook (prefix-affinity)
+        learn the placement so future matching prompts follow the pages.
+        """
+        self._ensure_replicas()
+        if replica is None:
+            live = self._live()
+            replica = min(live, key=lambda r: (r.load(), r.index)).index
+        elif not self.replicas[replica].alive:
+            raise ValueError(f"replica {replica} is not alive")
+        prefix = self.replicas[replica].engine.register_prefix(tokens)
+        note = getattr(self.policy, "note_prefix", None)
+        if note is not None:
+            note(tokens, replica)
+        return prefix
+
+    def step(self) -> None:
+        """One cluster tick: every live replica with work advances one step."""
+        self._ensure_replicas()
+        for r in self.replicas:
+            if r.has_work():
+                r.engine.step()
+
+    def has_work(self) -> bool:
+        return any(r.has_work() for r in self.replicas)
+
+    def run(self, max_ticks: int = 10_000) -> list:
+        """Drive until every replica drains (or ``max_ticks``); returns the
+        cluster-wide finished list.  Router wall-clock accumulates into
+        ``ClusterMetrics.wall_s`` — the throughput denominator."""
+        self._ensure_replicas()
+        t0 = time.perf_counter()
+        ticks = 0
+        while self.has_work() and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        self.metrics.wall_s += time.perf_counter() - t0
+        return self.finished
+
+    @property
+    def finished(self) -> list:
+        return [s for r in self.replicas for s in r.engine.finished]
+
+    # -- failure path ------------------------------------------------------
+    def fail_replica(self, index: int) -> list:
+        """Simulate losing replica ``index``: drain it and requeue its live
+        sessions onto the survivors.
+
+        Every in-flight and queued session comes off the failed engine with
+        its generated output intact; re-admission on the target replica
+        replays prompt+output through prefill, so streams resume token-exact
+        (each session keeps its ``Session`` handle — callers notice nothing
+        but latency).  Returns the requeued sessions.
+        """
+        self._ensure_replicas()
+        failed = self.replicas[index]
+        if not failed.alive:
+            raise ValueError(f"replica {index} already failed")
+        failed.alive = False
+        drained = failed.engine.drain()
+        self.metrics.record_failure(drained)
+        forget = getattr(self.policy, "forget_replica", None)
+        if forget is not None:
+            forget(index)
+        self._live()  # raises if nobody is left to take the load
+        for session in drained:
+            idx = self.policy.place(session.prompt, session.priority, self.replicas)
+            target = self.replicas[idx].engine
+            # scheduler-level resubmit keeps the Session object (and its
+            # partial output) alive — engine.submit would mint a new one
+            session._on_queued_cancel = target._record_queued_cancel
+            target.scheduler.submit(session)
+            self._placement[session.rid] = idx
+        return drained
+
+    # -- telemetry ---------------------------------------------------------
+    def _parts(self) -> list:
+        return [r.engine.metrics for r in self.replicas]
+
+    def summary(self) -> dict:
+        """Cluster roll-up plus a ``per_replica`` breakdown."""
+        self._ensure_replicas()
+        out = self.metrics.summary(self._parts())
+        out["tp"] = self.cfg.tp
+        out["per_replica"] = [
+            {"replica": r.index, "alive": r.alive, **r.engine.summary()}
+            for r in self.replicas
+        ]
+        return out
+
+    def to_records(self, benchmark: str, prefix: str, x=None) -> list:
+        self._ensure_replicas()
+        return self.metrics.to_records(self._parts(), benchmark, prefix, x=x)
+
+    def reset_metrics(self) -> None:
+        """Fresh telemetry on every replica and the router (post-warm-up)."""
+        for r in self.replicas:
+            r.engine.reset_metrics()
+        self.metrics = ClusterMetrics()

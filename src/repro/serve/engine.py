@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist.sharding import activation_sharding, param_specs
 from repro.kernels.api import BACKENDS, kernel_policy
 from repro.models.api import ModelApi
 
@@ -64,6 +65,34 @@ from .session import (
     QUEUED,
     Session,
 )
+
+
+#: Model families whose caches are plain attention KV and therefore serve
+#: through the batched engine today.  Recurrent families (ssm/xlstm/hybrid)
+#: carry per-lane conv/ssm state that cannot yet advance independently inside
+#: a shared batch — see the ROADMAP per-lane state isolation item.
+SERVABLE_FAMILIES = ("dense", "moe", "vlm")
+
+
+class UnsupportedFamilyError(NotImplementedError):
+    """A model family the engine cannot serve (no ``decode_chunk`` path).
+
+    Raised once, with the family named, wherever the refusal surfaces —
+    engine construction, or ``ClusterRouter.submit()`` for clusters whose
+    replicas spin up lazily.  ``family`` is the offending
+    ``ModelConfig.family``; ``missing`` is the ``ModelApi`` capability that
+    is ``None`` for it.
+    """
+
+    def __init__(self, family: str, missing: str = "decode_chunk"):
+        self.family = family
+        self.missing = missing
+        super().__init__(
+            f"model family {family!r} has no {missing}: recurrent per-lane "
+            "state cannot yet advance independently inside a shared batch; "
+            f"serve one of the dense-cache families {SERVABLE_FAMILIES} "
+            "instead (see the ROADMAP per-lane state isolation item)"
+        )
 
 
 @dataclass(frozen=True)
@@ -92,6 +121,14 @@ class EngineConfig:
       lane (``ceil(max_len / page_size)``).
     - ``backend`` / ``autotune`` — kernel policy scoped around the engine's
       compiled steps (``None``: ambient policy).
+    - ``mesh`` — optional :class:`jax.sharding.Mesh` for tensor-parallel
+      decode (see ``docs/scaling.md``).  With a mesh, params are placed by
+      the ``dist.sharding`` rules (head-sharded wq/wk/wv, row-parallel wo,
+      vocab-sharded embed/lm_head over the ``model`` axis), the KV/page
+      cache shards its KV-head dim, and the compiled steps trace inside
+      ``activation_sharding(mesh)`` so the model's logical-axis pins apply.
+      Sharded decode is token-identical to the single-device path; a dim
+      that does not divide the mesh axis stays replicated.
     - ``eos_id`` — sampled token that finishes a request early.
     - ``sampler`` — logits -> token function (greedy default).
     - ``scheduler`` — stock admission policy name used when no
@@ -106,6 +143,8 @@ class EngineConfig:
     backend: Optional[str] = None  # kernel_policy backend (None: ambient)
     # kernel_policy autotune for engine steps (None: ambient; bool: forced)
     autotune: Optional[bool] = None
+    # tensor-parallel device mesh for the compiled steps (None: single device)
+    mesh: Optional[jax.sharding.Mesh] = None
     eos_id: Optional[int] = None
     sampler: Callable = greedy
     scheduler: str = "fcfs"  # default policy when none is injected
@@ -155,20 +194,23 @@ class ServeEngine:
     def __init__(self, model: ModelApi, params, config: EngineConfig,
                  scheduler: Optional[Scheduler] = None):
         if model.decode_chunk is None:
-            raise NotImplementedError(
-                f"family {model.cfg.family!r} has no decode_chunk: recurrent "
-                "per-lane state cannot yet advance independently inside a "
-                "shared batch; serving currently targets the attention-cache "
-                "families (dense/moe/vlm)"
-            )
+            raise UnsupportedFamilyError(model.cfg.family)
         self.paged = config.page_size is not None
         if self.paged and (model.decode_step_paged is None
                            or model.decode_chunk_paged is None):
-            raise NotImplementedError(
-                f"family {model.cfg.family!r} has no paged decode path; "
-                "use page_size=None (dense KV) for this model"
-            )
+            raise UnsupportedFamilyError(model.cfg.family, missing="decode_chunk_paged")
         self.model = model
+        self.mesh = config.mesh
+        if self.mesh is not None and params is not None:
+            # Place params by the tensor-parallel rules before any compiled
+            # step traces: the compiled steps then inherit the layout instead
+            # of re-deciding it per trace.
+            shapes = jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params
+            )
+            params = jax.device_put(
+                params, param_specs(shapes, model.cfg, self.mesh)
+            )
         self.params = params
         self.cfg = config
         self.scheduler = scheduler if scheduler is not None else make_scheduler(config.scheduler)
@@ -194,7 +236,8 @@ class ServeEngine:
             self.page_tables: list = [[] for _ in range(config.n_slots)]
             self._bt = np.zeros((config.n_slots, self._table_width), np.int32)
             self._prefixes: dict = {}  # token tuple -> SharedPrefix
-            self.cache = model.init_paged_cache(self.n_pages, ps)
+            self.cache = self._place_cache(model.init_paged_cache(self.n_pages, ps),
+                                           model.paged_cache_shardings)
             self._decode = self._jit_scoped(model.decode_step_paged)
             self._chunk = self._jit_scoped(model.decode_chunk_paged)
             self._copy_page_fn = jax.jit(
@@ -206,28 +249,40 @@ class ServeEngine:
         else:
             self.n_pages = 0
             self._pad_pos = config.max_len
-            self.cache = model.init_cache(config.n_slots, config.max_len)
+            self.cache = self._place_cache(
+                model.init_cache(config.n_slots, config.max_len),
+                model.cache_shardings,
+            )
             self._decode = self._jit_scoped(model.decode_step)
             self._chunk = self._jit_scoped(model.decode_chunk)
             self.pos = jnp.zeros((config.n_slots,), jnp.int32)
         self.metrics = EngineMetrics(config.n_slots, n_pages=self.n_pages)
 
     # ------------------------------------------------------------------
-    def _jit_scoped(self, fn: Callable) -> Callable:
-        """jit ``fn`` so it traces under the config's kernel policy.
+    def _place_cache(self, cache, shardings_fn: Optional[Callable]):
+        """Commit a fresh cache to the engine's mesh (identity without one)."""
+        if self.mesh is None or shardings_fn is None:
+            return cache
+        return jax.device_put(cache, shardings_fn(cache, self.mesh))
 
-        With a policy set, jit a per-engine closure (not ``fn`` itself):
-        jax's trace cache is keyed on function identity, not on the policy
-        contextvar, so jitting the shared ``model.decode_*`` directly would
-        let a second engine with a different backend silently reuse the
-        first engine's trace."""
-        if self.cfg.backend is None and self.cfg.autotune is None:
+    def _jit_scoped(self, fn: Callable) -> Callable:
+        """jit ``fn`` so it traces under the config's kernel policy and mesh.
+
+        With a policy or mesh set, jit a per-engine closure (not ``fn``
+        itself): jax's trace cache is keyed on function identity, not on the
+        policy contextvar or the activation-sharding mesh, so jitting the
+        shared ``model.decode_*`` directly would let a second engine with a
+        different backend/mesh silently reuse the first engine's trace."""
+        if self.cfg.backend is None and self.cfg.autotune is None and self.mesh is None:
             return jax.jit(fn)
-        backend, autotune = self.cfg.backend, self.cfg.autotune
+        backend, autotune, mesh = self.cfg.backend, self.cfg.autotune, self.mesh
 
         def scoped(*args):  # fresh object per engine -> own trace cache
             with kernel_policy(backend=backend, autotune=autotune):
-                return fn(*args)
+                if mesh is None:
+                    return fn(*args)
+                with activation_sharding(mesh):
+                    return fn(*args)
 
         return jax.jit(scoped)
 
@@ -588,6 +643,44 @@ class ServeEngine:
             self.step()
             ticks += 1
         return self.finished
+
+    def drain(self) -> list:
+        """Evict every in-flight and queued session, with output intact.
+
+        Slot lanes are released (paged lanes return their pages) and every
+        live session — running or queued — comes back in ``QUEUED`` state.
+        Because a re-admitted session replays prompt+output through prefill
+        (the recompute-preemption invariant), the returned sessions can be
+        re-submitted to any engine over the same params and resume
+        token-exact.  This is the replica-failure path of
+        :class:`~repro.serve.cluster.ClusterRouter`.
+        """
+        drained = []
+        for lane, session in enumerate(self.slots):
+            if session is not None:
+                self._release_lane(lane)
+                session.status = QUEUED
+                session.stats.preemptions += 1  # evicted mid-flight, will resume
+                drained.append(session)
+        # Empty the queue via the scheduler's optional drain() extension;
+        # otherwise pull through select with n_free clamped up to n_slots so
+        # batch-boundary policies release too.  A custom policy that still
+        # withholds sessions while claiming pending work would loop forever,
+        # so stop when select comes back empty.
+        drainer = getattr(self.scheduler, "drain", None)
+        if drainer is not None:
+            drained.extend(drainer())
+        else:
+            while self.scheduler.pending() > 0:
+                batch = self.scheduler.select(
+                    max(self.scheduler.pending(), self.cfg.n_slots), self.cfg.n_slots
+                )
+                if not batch:
+                    break
+                drained.extend(batch)
+        for session in drained:
+            session.status = QUEUED
+        return drained
 
     def summary(self) -> dict:
         return self.metrics.summary()

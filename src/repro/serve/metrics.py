@@ -8,8 +8,16 @@ percentiles, throughput, occupancy/concurrency, page occupancy, preemption
 and shared-prefix-hit counts) and ``to_records()`` emits them in the
 schema-v1 record format the bench subsystem stores and gates (the
 ``page_occupancy`` row appears only for paged engines).
+
+:class:`ClusterMetrics` is the one-level-up view: it pools per-replica
+``EngineMetrics`` into a single cluster summary (request samples pooled,
+throughput counters summed, occupancy weighted by each replica's tick
+coverage) and adds the router-level counters — replica failures and
+requeued sessions — that no single engine can see.
 """
 from __future__ import annotations
+
+from typing import Sequence
 
 from repro.core.timing import percentile
 
@@ -209,3 +217,143 @@ class EngineMetrics:
                 )
             )
         return rows
+
+
+class ClusterMetrics:
+    """Router-level telemetry pooled over per-replica :class:`EngineMetrics`.
+
+    Request-level samples (TTFT, inter-token gaps) are pooled across
+    replicas — a cluster percentile is over *all* finished requests, not a
+    mean of per-replica percentiles.  Occupancy is slot-weighted: each
+    replica contributes ``sum(occ samples)`` over ``ticks * n_slots``, so a
+    busy replica with more ticks weighs more — a naive mean of per-replica
+    occupancies would not.  Throughput uses the router's own wall clock
+    (``wall_s``) when set: in-process replicas step sequentially, so summing
+    per-replica engine time would double-count the same wall interval.
+
+    The router itself records what engines can't see: replica failures and
+    the sessions drained + requeued onto surviving replicas.
+    """
+
+    def __init__(self):
+        self.failures = 0  # replicas failed over the cluster's lifetime
+        self.requeued_sessions = 0  # sessions drained off a failed replica
+        self.requeued_tokens = 0  # generated tokens carried through requeue
+        self.routed = 0  # submit() placements (first placement only)
+        self.wall_s = 0.0  # router-measured serving wall-clock
+
+    def record_route(self) -> None:
+        self.routed += 1
+
+    def record_failure(self, drained: Sequence[Session]) -> None:
+        self.failures += 1
+        self.requeued_sessions += len(drained)
+        self.requeued_tokens += sum(len(s.out) for s in drained)
+
+    # -- derived -----------------------------------------------------------
+    def summary(self, parts: Sequence[EngineMetrics]) -> dict:
+        """Cluster summary over per-replica engine metrics (times in ms)."""
+        ttft = [t for m in parts for t in m.ttft_s]
+        gaps = [g for m in parts for g in m.token_latency_s]
+        generated = sum(m.generated_tokens for m in parts)
+        engine_s = sum(sum(m.tick_s) + sum(m.prefill_s) for m in parts)
+        total_s = self.wall_s or engine_s
+        occ_num = sum(sum(m.occupancy) for m in parts)
+        occ_den = sum(len(m.occupancy) * m.n_slots for m in parts)
+        prefill_s = sum(sum(m.prefill_s) for m in parts)
+        page_num = sum(sum(m.pages_used) for m in parts)
+        page_den = sum(len(m.pages_used) * m.n_pages for m in parts if m.n_pages)
+        n_t = len(ttft)
+        return {
+            "replicas": len(parts),
+            "requests": sum(m.finished for m in parts),
+            "cancelled": sum(m.cancelled for m in parts),
+            "generated_tokens": generated,
+            "prefill_tokens": sum(m.prefill_tokens for m in parts),
+            "ticks": sum(len(m.tick_s) for m in parts),
+            "total_s": total_s,
+            "throughput_tok_s": generated / total_s if total_s else 0.0,
+            "prefill_tok_s": (
+                sum(m.prefill_tokens for m in parts) / prefill_s
+                if prefill_s else 0.0
+            ),
+            "ttft_ms_mean": (sum(ttft) / n_t * 1e3) if n_t else float("nan"),
+            "ttft_ms_p50": percentile(ttft, 50) * 1e3,
+            "ttft_ms_p95": percentile(ttft, 95) * 1e3,
+            "tok_latency_ms_p50": percentile(gaps, 50) * 1e3,
+            "tok_latency_ms_p95": percentile(gaps, 95) * 1e3,
+            "occupancy": occ_num / occ_den if occ_den else 0.0,
+            # mean concurrently-active lanes summed over replicas: the
+            # cluster-wide twin of EngineMetrics.concurrency
+            "concurrency": sum(m.summary()["concurrency"] for m in parts),
+            "page_occupancy": page_num / page_den if page_den else 0.0,
+            # per-replica pools are disjoint, so the cluster-wide KV
+            # footprint peak is the sum of per-replica peaks
+            "pages_peak": sum(max(m.pages_used, default=0) for m in parts),
+            "preemptions": sum(m.preemptions for m in parts),
+            "prefix_hits": sum(m.prefix_hits for m in parts),
+            "prefix_tokens_reused": sum(m.prefix_tokens_reused for m in parts),
+            "routed": self.routed,
+            "failures": self.failures,
+            "requeued_sessions": self.requeued_sessions,
+            "requeued_tokens": self.requeued_tokens,
+        }
+
+    def to_records(
+        self,
+        parts: Sequence[EngineMetrics],
+        benchmark: str,
+        prefix: str,
+        x=None,
+    ) -> list:
+        """Schema-v1 rows for one cluster run (pooled-percentile semantics)."""
+        from repro.bench.schema import BenchRecord
+
+        s = self.summary(parts)
+        shared = {
+            "replicas": s["replicas"],
+            "requests": s["requests"],
+            "generated_tokens": s["generated_tokens"],
+            "failures": s["failures"],
+            "requeued_sessions": s["requeued_sessions"],
+        }
+        return [
+            BenchRecord(
+                name=f"{prefix}_ttft",
+                benchmark=benchmark,
+                x=x,
+                value=s["ttft_ms_mean"],
+                unit="ms",
+                metrics={**shared, "p50": s["ttft_ms_p50"], "p95": s["ttft_ms_p95"]},
+                info="cluster TTFT pooled over all replicas",
+            ),
+            BenchRecord(
+                name=f"{prefix}_tok_latency_p95",
+                benchmark=benchmark,
+                x=x,
+                value=s["tok_latency_ms_p95"],
+                unit="ms",
+                metrics={**shared, "p50": s["tok_latency_ms_p50"]},
+                info="p95 inter-token latency pooled over all replicas",
+            ),
+            BenchRecord(
+                name=f"{prefix}_throughput",
+                benchmark=benchmark,
+                x=x,
+                value=s["throughput_tok_s"],
+                unit="tok/s",
+                better="higher",
+                metrics={**shared, "total_s": s["total_s"]},
+                info="cluster generated tokens / router wall-clock",
+            ),
+            BenchRecord(
+                name=f"{prefix}_occupancy",
+                benchmark=benchmark,
+                x=x,
+                value=s["occupancy"],
+                unit="frac",
+                better="info",
+                metrics={**shared, "concurrency": s["concurrency"]},
+                info="slot-weighted mean occupancy across replicas",
+            ),
+        ]

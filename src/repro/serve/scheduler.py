@@ -45,6 +45,13 @@ class Scheduler(Protocol):
         """Number of live queued sessions."""
         ...
 
+    # Optional extension (not part of the minimal protocol): ``drain() ->
+    # list[Session]`` returns every live queued session and empties the
+    # queue.  ``ServeEngine.drain`` — the cluster's replica-failure path —
+    # uses it when present and otherwise falls back to pulling the queue
+    # through ``select``, so custom schedulers only need it if their
+    # ``select`` withholds sessions (e.g. batch-boundary policies).
+
 
 class FCFSScheduler:
     """First-come-first-served continuous batching."""
@@ -54,6 +61,11 @@ class FCFSScheduler:
 
     def submit(self, session: Session) -> None:
         self._queue.append(session)
+
+    def drain(self) -> list:
+        out = [s for s in self._queue if not s.done]
+        self._queue.clear()
+        return out
 
     def _prune(self) -> None:
         while self._queue and self._queue[0].done:
@@ -81,6 +93,11 @@ class PriorityScheduler:
     def submit(self, session: Session) -> None:
         heapq.heappush(self._heap, (-session.priority, self._seq, session))
         self._seq += 1
+
+    def drain(self) -> list:
+        out = [s for _, _, s in sorted(self._heap) if not s.done]
+        self._heap.clear()
+        return out
 
     def select(self, n_free: int, n_slots: int) -> list:
         out = []

@@ -1,7 +1,41 @@
-# NOTE: deliberately NO XLA_FLAGS here — smoke tests and benches must see the
-# real single CPU device.  Multi-device tests spawn subprocesses that set
-# --xla_force_host_platform_device_count themselves (see tests/utils.py).
+# NOTE: deliberately NO unconditional XLA_FLAGS here — smoke tests and
+# benches must see the real single CPU device.  Multi-device tests either
+# spawn subprocesses that set --xla_force_host_platform_device_count
+# themselves (tests/utils.run_with_devices), or are marked `multidevice`
+# and run in-process only when REPRO_FORCE_DEVICES is exported (the CI
+# multidevice job runs `REPRO_FORCE_DEVICES=8 pytest -m multidevice`).
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Env-guarded fake-device mode: conftest imports run before any test module
+# imports jax, so this is early enough for the flag to take effect.
+_force = os.environ.get("REPRO_FORCE_DEVICES")
+if _force:
+    _flag = f"--xla_force_host_platform_device_count={int(_force)}"
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") + " " + _flag).strip()
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "multidevice(n): needs >= n jax devices in-process; skipped when "
+        "fewer are visible (export REPRO_FORCE_DEVICES=8 to run)",
+    )
+
+
+def pytest_runtest_setup(item):
+    marker = item.get_closest_marker("multidevice")
+    if marker is None:
+        return
+    need = int(marker.args[0]) if marker.args else int(marker.kwargs.get("n", 2))
+    import jax
+    import pytest
+
+    have = jax.device_count()
+    if have < need:
+        pytest.skip(
+            f"needs {need} devices, have {have} "
+            f"(export REPRO_FORCE_DEVICES={need} to force fake host devices)"
+        )

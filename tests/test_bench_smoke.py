@@ -29,6 +29,9 @@ _SMOKE_OVERRIDES = {
        for b in ("pallas", "xla")},
     **{f"serving[{b}]": {"requests": 2, "prompt_lens": (4,), "out_lens": (3,)}
        for b in ("pallas", "xla")},
+    **{f"serving_scaled[{b}]": {"tps": (1,), "replicas": (1, 2), "requests": 2,
+                                "prompt_len": 4, "out_len": 3, "page_sizes": (4,)}
+       for b in ("pallas", "xla")},
 }
 
 
@@ -66,7 +69,8 @@ def test_runner_select_filters_by_prefix():
     "name",
     ["atomics", "axpy", "bandwidth", "gemm", "instr", "memhier", "scheduler", "throttle",
      "bandwidth[pallas]", "bandwidth[xla]", "memhier[pallas]", "memhier[xla]",
-     "scheduler[pallas]", "scheduler[xla]", "serving[pallas]", "serving[xla]"],
+     "scheduler[pallas]", "scheduler[xla]", "serving[pallas]", "serving[xla]",
+     "serving_scaled[pallas]", "serving_scaled[xla]"],
 )
 def test_quick_mode_produces_valid_records(quick_records, name):
     recs = quick_records[name]

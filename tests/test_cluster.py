@@ -1,0 +1,378 @@
+"""Sharded serving cluster: router policies, replica parity, failover, and
+tensor-parallel token identity.
+
+Single-device tests cover the data-parallel layer (policy routing, cluster
+== single-engine token streams, metric aggregation, replica-failure
+drain/requeue, the typed family refusal at ``submit()``).  Tensor-parallel
+identity runs in a subprocess with forced fake host devices
+(``tests/utils.run_with_devices``); the ``multidevice``-marked tests
+additionally exercise replicas × tp in-process when ``REPRO_FORCE_DEVICES``
+grants enough devices (the CI multidevice job).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import (
+    ClusterConfig,
+    ClusterRouter,
+    EngineConfig,
+    LeastLoadedPolicy,
+    PrefixAffinityPolicy,
+    RoundRobinPolicy,
+    ServeEngine,
+    UnsupportedFamilyError,
+    make_router,
+    replica_meshes,
+)
+from tests.utils import run_with_devices
+
+
+@pytest.fixture(scope="module")
+def gemma():
+    cfg = get_config("gemma-2b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _prompts(cfg, n, lens=(3, 5, 4), seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        [int(t) for t in rng.integers(1, cfg.vocab_size, lens[i % len(lens)])]
+        for i in range(n)
+    ]
+
+
+def _reference_outputs(model, params, prompts, max_new=8, **cfg_kw):
+    engine = ServeEngine(
+        model, params, EngineConfig(n_slots=2, max_len=32, prefill_chunk=4, **cfg_kw)
+    )
+    sessions = [engine.submit(p, max_new) for p in prompts]
+    engine.run()
+    return {tuple(p): s.out for p, s in zip(prompts, sessions)}
+
+
+# ---------------------------------------------------------------------------
+# routing policies (unit, no engines)
+# ---------------------------------------------------------------------------
+class _StubReplica:
+    def __init__(self, index, load, alive=True):
+        self.index, self._load, self.alive = index, load, alive
+
+    def load(self):
+        return self._load
+
+
+def test_round_robin_cycles_and_skips_dead():
+    policy = RoundRobinPolicy()
+    replicas = [_StubReplica(0, 0), _StubReplica(1, 0, alive=False), _StubReplica(2, 0)]
+    picks = [policy.place([1], 0, replicas) for _ in range(4)]
+    assert picks == [0, 2, 0, 2]
+
+
+def test_least_loaded_picks_min_load_lowest_index():
+    policy = LeastLoadedPolicy()
+    replicas = [_StubReplica(0, 5), _StubReplica(1, 2), _StubReplica(2, 2)]
+    assert policy.place([1], 0, replicas) == 1
+    replicas[1].alive = False
+    assert policy.place([1], 0, replicas) == 2
+
+
+def test_prefix_affinity_longest_match_and_fallback():
+    policy = PrefixAffinityPolicy()
+    replicas = [_StubReplica(0, 9), _StubReplica(1, 0), _StubReplica(2, 3)]
+    policy.note_prefix([1, 2], 0)
+    policy.note_prefix([1, 2, 3], 2)
+    assert policy.place([1, 2, 3, 4], 0, replicas) == 2  # longest prefix wins
+    assert policy.place([1, 2, 9], 0, replicas) == 0  # shorter match
+    assert policy.place([7, 8, 9], 0, replicas) == 1  # no match: least-loaded
+    policy.forget_replica(2)
+    assert policy.place([1, 2, 3, 4], 0, replicas) == 0  # survivor's prefix
+
+
+def test_make_router_unknown_name():
+    with pytest.raises(ValueError, match="unknown router"):
+        make_router("nope")
+
+
+def test_replica_meshes_single_device():
+    meshes = replica_meshes(3, tp=1, devices=jax.devices()[:1])
+    assert meshes == [None, None, None]
+    with pytest.raises(ValueError, match="needs 2 devices"):
+        replica_meshes(1, tp=2, devices=jax.devices()[:1])
+
+
+def test_max_useful_tp(gemma):
+    cfg, _, _ = gemma  # reduced gemma: n_heads=4, n_kv_heads=1
+    assert cfg.max_useful_tp() == 1
+    assert cfg.replace(n_kv_heads=2).max_useful_tp() == 2
+    assert cfg.replace(n_kv_heads=4).max_useful_tp() == 4
+    assert cfg.replace(n_kv_heads=4).max_useful_tp(limit=2) == 2
+
+
+# ---------------------------------------------------------------------------
+# typed family refusal
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def xlstm():
+    cfg = get_config("xlstm-1.3b").reduced()
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.key(0))
+
+
+def test_engine_raises_typed_family_error(xlstm):
+    cfg, model, params = xlstm
+    with pytest.raises(UnsupportedFamilyError) as exc:
+        ServeEngine(model, params, EngineConfig(n_slots=2, max_len=16))
+    assert exc.value.family == cfg.family
+    assert exc.value.missing == "decode_chunk"
+    assert "dense" in str(exc.value)  # names the fallback families
+    assert isinstance(exc.value, NotImplementedError)  # old catch sites hold
+
+
+def test_cluster_surfaces_family_error_at_submit(xlstm):
+    _, model, params = xlstm
+    cluster = ClusterRouter(model, params, ClusterConfig(
+        engine=EngineConfig(n_slots=2, max_len=16), n_replicas=2))
+    # construction is lazy: no error until the first submit
+    with pytest.raises(UnsupportedFamilyError, match="decode_chunk"):
+        cluster.submit([1, 2, 3], 4)
+
+
+# ---------------------------------------------------------------------------
+# cluster == single engine (token streams), 1 device
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("router", ["round_robin", "least_loaded"])
+def test_cluster_matches_single_engine(gemma, router):
+    cfg, model, params = gemma
+    prompts = _prompts(cfg, 6)
+    ref = _reference_outputs(model, params, prompts)
+    cluster = ClusterRouter(model, params, ClusterConfig(
+        engine=EngineConfig(n_slots=2, max_len=32, prefill_chunk=4),
+        n_replicas=2, router=router))
+    sessions = [cluster.submit(p, 8) for p in prompts]
+    cluster.run()
+    for p, s in zip(prompts, sessions):
+        assert s.out == ref[tuple(p)], (router, p)
+    # rids are cluster-unique (per-replica stride)
+    rids = [s.rid for s in sessions]
+    assert len(set(rids)) == len(rids)
+
+
+def test_cluster_metrics_aggregate(gemma):
+    cfg, model, params = gemma
+    prompts = _prompts(cfg, 6, seed=1)
+    cluster = ClusterRouter(model, params, ClusterConfig(
+        engine=EngineConfig(n_slots=2, max_len=32, prefill_chunk=4),
+        n_replicas=2))
+    for p in prompts:
+        cluster.submit(p, 6)
+    cluster.run()
+    summ = cluster.summary()
+    per = summ["per_replica"]
+    assert summ["replicas"] == 2 and len(per) == 2
+    assert summ["requests"] == 6 == sum(r["requests"] for r in per)
+    assert summ["generated_tokens"] == sum(r["generated_tokens"] for r in per)
+    assert summ["routed"] == 6 and summ["failures"] == 0
+    assert 0 < summ["occupancy"] <= 1
+    assert summ["throughput_tok_s"] > 0
+    recs = cluster.to_records("serving_scaled", "cluster", x=2)
+    assert {r.name for r in recs} == {
+        "cluster_ttft", "cluster_tok_latency_p95",
+        "cluster_throughput", "cluster_occupancy",
+    }
+    for r in recs:
+        assert r.metrics["replicas"] == 2
+
+
+def test_prefix_affinity_routes_to_prefix_owner(gemma):
+    cfg, model, params = gemma
+    cluster = ClusterRouter(model, params, ClusterConfig(
+        engine=EngineConfig(n_slots=2, max_len=32, prefill_chunk=4, page_size=4),
+        n_replicas=2, router="prefix_affinity"))
+    prefix = [1, 2, 3, 4]
+    cluster.register_prefix(prefix, replica=1)
+    s = cluster.submit(prefix + [5, 6], 4)
+    assert cluster._placement[s.rid] == 1
+    cluster.run()
+    assert s.done
+    # the fork actually reused shared pages on the owning replica
+    assert cluster.replicas[1].engine.metrics.prefix_hits == 1
+
+
+# ---------------------------------------------------------------------------
+# failure drain / requeue
+# ---------------------------------------------------------------------------
+def test_failover_resumes_token_exact(gemma):
+    cfg, model, params = gemma
+    prompts = _prompts(cfg, 6, seed=2)
+    ref = _reference_outputs(model, params, prompts)
+    cluster = ClusterRouter(model, params, ClusterConfig(
+        engine=EngineConfig(n_slots=2, max_len=32, prefill_chunk=4, page_size=4),
+        n_replicas=2, router="round_robin"))
+    sessions = [cluster.submit(p, 8) for p in prompts]
+    for _ in range(3):  # some sessions mid-decode, some still queued
+        cluster.step()
+    drained = cluster.fail_replica(0)
+    assert drained and any(s.out for s in drained)  # in-flight output kept
+    cluster.run()
+    for p, s in zip(prompts, sessions):
+        assert s.done
+        assert s.out == ref[tuple(p)], ("failover", p)
+    summ = cluster.summary()
+    assert summ["failures"] == 1
+    assert summ["requeued_sessions"] == len(drained)
+    assert not cluster.replicas[0].alive
+    with pytest.raises(ValueError, match="already failed"):
+        cluster.fail_replica(0)
+
+
+def test_failover_last_replica_raises(gemma):
+    cfg, model, params = gemma
+    cluster = ClusterRouter(model, params, ClusterConfig(
+        engine=EngineConfig(n_slots=2, max_len=32, prefill_chunk=4),
+        n_replicas=1))
+    cluster.submit(_prompts(cfg, 1)[0], 4)
+    with pytest.raises(RuntimeError, match="no live replicas"):
+        cluster.fail_replica(0)
+
+
+def test_engine_drain_returns_running_and_queued(gemma):
+    cfg, model, params = gemma
+    engine = ServeEngine(model, params,
+                         EngineConfig(n_slots=2, max_len=32, prefill_chunk=4))
+    sessions = [engine.submit(p, 8) for p in _prompts(cfg, 5, seed=3)]
+    engine.step()  # two running, three queued
+    drained = engine.drain()
+    assert len(drained) == 5
+    assert all(s.status == "queued" for s in drained)
+    assert not engine.has_work()
+    assert {s.rid for s in drained} == {s.rid for s in sessions}
+
+
+class _NoDrainFCFS:
+    """Scheduler without the optional drain() — exercises the select-loop
+    fallback in ServeEngine.drain."""
+
+    def __init__(self):
+        self._q = []
+
+    def submit(self, s):
+        self._q.append(s)
+
+    def select(self, n_free, n_slots):
+        out, self._q = self._q[:n_free], self._q[n_free:]
+        return [s for s in out if not s.done]
+
+    def pending(self):
+        return sum(1 for s in self._q if not s.done)
+
+
+def test_engine_drain_without_scheduler_drain(gemma):
+    cfg, model, params = gemma
+    engine = ServeEngine(
+        model, params, EngineConfig(n_slots=2, max_len=32, prefill_chunk=4),
+        scheduler=_NoDrainFCFS())
+    for p in _prompts(cfg, 4, seed=4):
+        engine.submit(p, 4)
+    drained = engine.drain()
+    assert len(drained) == 4 and engine.scheduler.pending() == 0
+
+
+def test_cluster_config_rejects_engine_mesh(gemma):
+    with pytest.raises(ValueError, match="owns device placement"):
+        ClusterConfig(
+            engine=EngineConfig(
+                n_slots=2, max_len=16,
+                mesh=jax.sharding.Mesh(np.array(jax.devices()[:1]), ("model",)),
+            ),
+            n_replicas=2,
+        )
+
+
+# ---------------------------------------------------------------------------
+# tensor parallel: token identity under forced fake devices (subprocess)
+# ---------------------------------------------------------------------------
+def test_tp_decode_token_identity_subprocess():
+    """Sharded decode (tp in {1,2,4}, dense + paged) produces the same token
+    streams as the no-mesh engine, verified under 8 fake CPU devices."""
+    out = run_with_devices(
+        """
+        import jax, numpy as np
+        from jax.sharding import Mesh
+        from repro.configs import get_config
+        from repro.models import build_model
+        from repro.serve import EngineConfig, ServeEngine
+
+        cfg = get_config("gemma-2b").reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        prompts = [[1 + (i % 5), 2, 3 + i % 7] for i in range(4)]
+
+        def drive(mesh, page_size):
+            engine = ServeEngine(model, params, EngineConfig(
+                n_slots=2, max_len=32, prefill_chunk=4,
+                page_size=page_size, mesh=mesh))
+            sessions = [engine.submit(p, 6) for p in prompts]
+            engine.run()
+            return [s.out for s in sessions]
+
+        ref = drive(None, None)
+        assert drive(None, 4) == ref  # paged == dense, unsharded
+        for tp in (1, 2, 4):
+            mesh = Mesh(np.array(jax.devices()[:tp]), ("model",))
+            for ps in (None, 4):
+                got = drive(mesh, ps)
+                assert got == ref, (tp, ps, got, ref)
+                print(f"tp={tp} ps={ps} OK")
+        print("TP_IDENTITY_OK")
+        """,
+        n_devices=8,
+    )
+    assert "TP_IDENTITY_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# in-process multi-device (CI multidevice job: REPRO_FORCE_DEVICES=8)
+# ---------------------------------------------------------------------------
+@pytest.mark.multidevice(4)
+def test_cluster_tp_replicas_in_process(gemma):
+    """2 replicas x tp=2 on disjoint device pairs: same tokens as the
+    single-device single-engine reference."""
+    cfg, model, params = gemma
+    prompts = _prompts(cfg, 6, seed=5)
+    ref = _reference_outputs(model, params, prompts)
+    cluster = ClusterRouter(model, params, ClusterConfig(
+        engine=EngineConfig(n_slots=2, max_len=32, prefill_chunk=4),
+        n_replicas=2, tp=2))
+    sessions = [cluster.submit(p, 8) for p in prompts]
+    cluster.run()
+    for p, s in zip(prompts, sessions):
+        assert s.out == ref[tuple(p)]
+    meshes = [r.mesh for r in cluster.replicas]
+    assert all(m is not None and m.shape["model"] == 2 for m in meshes)
+    # disjoint device pairs when the pool is large enough
+    d0 = {d.id for d in meshes[0].devices.flat}
+    d1 = {d.id for d in meshes[1].devices.flat}
+    assert d0.isdisjoint(d1)
+
+
+@pytest.mark.multidevice(4)
+def test_cluster_failover_sharded_in_process(gemma):
+    """Failover between tensor-parallel replicas stays token-exact."""
+    cfg, model, params = gemma
+    prompts = _prompts(cfg, 4, seed=6)
+    ref = _reference_outputs(model, params, prompts)
+    cluster = ClusterRouter(model, params, ClusterConfig(
+        engine=EngineConfig(n_slots=2, max_len=32, prefill_chunk=4, page_size=4),
+        n_replicas=2, tp=2, router="round_robin"))
+    sessions = [cluster.submit(p, 8) for p in prompts]
+    for _ in range(2):
+        cluster.step()
+    cluster.fail_replica(1)
+    cluster.run()
+    for p, s in zip(prompts, sessions):
+        assert s.out == ref[tuple(p)]

@@ -2,11 +2,18 @@
 three roofline terms (the hypothesis -> change -> re-lower -> measure loop).
 
     PYTHONPATH=src python -m benchmarks.hillclimb --arch olmoe-1b-7b \
-        --shape train_4k --set moe_shard=ffn --set train_microbatches=2
+        --shape train_4k --set moe_shard=ffn --set train_microbatches=2 \
+        [--hw h100]
 
 Each variant is a full dry-run lower+compile with collective/memory/compute
 extraction; results print as a comparison row against the no-override
-baseline artifact (if present in --baseline-dir).
+baseline artifact (if present in --baseline-dir).  ``--hw`` names any part
+in the ``repro.hw`` spec database (default the TPU v5e target), so the same
+climb can be costed against another generation's roofline.
+
+This is a thin entry point over ``repro.launch.cell``/``repro.launch.dryrun``
+(it imports them, not the other way round); the modeled tile scoring it
+exercises lives in ``repro.core.autotune``.
 """
 from __future__ import annotations
 
@@ -39,6 +46,8 @@ def main(argv=None):
     ap.add_argument("--baseline-dir", default="artifacts/dryrun")
     ap.add_argument("--tag", default=None)
     ap.add_argument("--out", default="artifacts/hillclimb")
+    ap.add_argument("--hw", default="tpu-v5e",
+                    help="repro.hw spec-DB part to roofline against (name or alias)")
     args = ap.parse_args(argv)
 
     import os
@@ -59,14 +68,15 @@ def main(argv=None):
     out_dir.mkdir(parents=True, exist_ok=True)
     t0 = time.time()
     cell = build_cell(cfg, shape, mesh)
-    rec = run_cell(cell, out_dir)
+    rec = run_cell(cell, out_dir, hw=args.hw)
     tag = args.tag or "+".join(f"{k}={v}" for k, v in overrides.items()) or "baseline"
     rec["overrides"] = overrides
     path = out_dir / f"{cell.name}__{tag.replace('/', '_')}.json"
     path.write_text(json.dumps(rec, indent=2))
 
     rt = rec["roofline"]
-    print(f"\n=== {cell.name} [{tag}] ({time.time() - t0:.0f}s) ===")
+    print(f"\n=== {cell.name} [{tag}] vs {rt.get('hw', args.hw)} "
+          f"({time.time() - t0:.0f}s) ===")
     print(f"compute    {rt['compute_s'] * 1e3:10.3f} ms")
     print(f"memory     {rt['memory_s'] * 1e3:10.3f} ms")
     print(f"collective {rt['collective_s'] * 1e3:10.3f} ms   <- dominant: {rt['dominant']}")

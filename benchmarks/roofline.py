@@ -3,6 +3,12 @@ per-(arch x shape x mesh) table (markdown + CSV).
 
     PYTHONPATH=src python -m benchmarks.roofline --dir artifacts/dryrun
     PYTHONPATH=src python -m benchmarks.roofline --compare before/ after/
+    PYTHONPATH=src python -m benchmarks.roofline --hw t4 a100 h100
+
+``--hw`` re-rooflines every artifact against the named parts from the
+``repro.hw`` spec database (via ``perfmodel.roofline.roofline_across``) and
+prints a cross-generation table — the paper's T4-vs-P4-vs-V100 comparison
+applied to whole compiled programs.
 """
 from __future__ import annotations
 
@@ -46,12 +52,58 @@ HEADER = (
 )
 
 
+def cross_hw_rows(recs: list[dict], hw_names: list[str]) -> list[str]:
+    """Re-roofline each artifact's stored costs against spec-DB parts."""
+    from repro.perfmodel.costs import CompiledCosts
+    from repro.perfmodel.hlo import CollectiveStats
+    from repro.perfmodel.roofline import roofline_across
+
+    lines = [
+        "| cell | " + " | ".join(f"{h} (dominant, bound ms)" for h in hw_names) + " |",
+        "|---|" + "---|" * len(hw_names),
+    ]
+    for r in recs:
+        mem = r["memory"]
+        costs = CompiledCosts(
+            flops_per_device=mem["flops_per_device"],
+            bytes_per_device=mem["bytes_per_device"],
+            transcendentals=mem.get("transcendentals", 0.0),
+            arg_bytes=0, out_bytes=0, temp_bytes=0, alias_bytes=0, code_bytes=0,
+        )
+        coll = CollectiveStats(per_device_bytes=r["collectives"]["per_device_bytes"])
+        # invert stored model_flops back to tokens so the fraction is exact
+        factor = 6.0 if r["kind"] == "train" else 2.0
+        tokens = r["roofline"]["model_flops"] / (factor * r["n_params_active"])
+        across = roofline_across(
+            costs, coll, chips=r["chips"], kind=r["kind"],
+            n_params_active=r["n_params_active"], tokens=tokens, hws=hw_names,
+        )
+        cells = [
+            f"{rt.dominant} {max(rt.compute_s, rt.memory_s, rt.collective_s) * 1e3:.2f}"
+            for rt in across.values()
+        ]
+        lines.append(f"| {r['cell']} | " + " | ".join(cells) + " |")
+    return lines
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="artifacts/dryrun")
     ap.add_argument("--compare", nargs=2, default=None, metavar=("BEFORE", "AFTER"))
     ap.add_argument("--csv", default=None)
+    ap.add_argument("--hw", nargs="+", default=None, metavar="PART",
+                    help="cross-generation mode: re-roofline artifacts against "
+                         "these repro.hw spec-DB parts")
     args = ap.parse_args(argv)
+
+    if args.hw:
+        recs = [
+            r for r in load_records(Path(args.dir))
+            if r.get("ok") and not r.get("skipped")
+        ]
+        for line in cross_hw_rows(recs, args.hw):
+            print(line)
+        return
 
     if args.compare:
         before = {r["cell"]: r for r in load_records(Path(args.compare[0])) if r.get("ok") and not r.get("skipped")}

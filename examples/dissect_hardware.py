@@ -6,9 +6,10 @@ print a Table-3.1-style report, then show what the knowledge buys you
 """
 import argparse
 
+import repro.hw as hw
 from repro.core.autotune import choose_matmul_tiles, matmul_time_model
 from repro.core.dissect import dissect_measure, dissect_model
-from repro.core.hwmodel import TPU_V5E, T4_PAPER
+from repro.hw import T4_PAPER, TPU_V5E
 
 
 def main(argv=None):
@@ -37,6 +38,17 @@ def main(argv=None):
     for lvl in T4_PAPER.levels:
         print(f"  {lvl.name}: {lvl.size_bytes >> 10} KiB, {lvl.latency_ns:.1f} ns "
               f"({lvl.latency_ns * 1.59:.0f} cycles @1.59GHz)")
+
+    # dissect_measure registered the fitted host into the spec DB, so the
+    # cross-generation comparison the paper tabulates is one call away
+    print("\n=== spec DB: this host vs the paper's T4 ===")
+    c = hw.compare("measured-host", "T4")
+    print(f"  fp32 peak ratio: {c['peak_ratio'].get('float32', 0):.4f}x; "
+          f"memory bw ratio: {c['main_memory_Bps_ratio']:.3f}x")
+    c = hw.compare("T4", "P4")
+    print("=== spec DB: T4 vs P4 (the paper's own columns) ===")
+    for dt, r in c["peak_ratio"].items():
+        print(f"  {dt:>8}: {r:8.2f}x")
 
     print("\n=== knowledge -> optimization (Ch.1) ===")
     t_naive, _ = matmul_time_model(8192, 8192, 8192, 128, 128, 128, "bfloat16", TPU_V5E)

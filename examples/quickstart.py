@@ -12,7 +12,7 @@ import jax.numpy as jnp
 
 from repro.core.autotune import choose_matmul_tiles
 from repro.core.dissect import dissect_measure
-from repro.core.hwmodel import TPU_V5E
+from repro.hw import TPU_V5E
 from repro.configs import get_config
 from repro.models import build_model
 

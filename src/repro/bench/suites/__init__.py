@@ -11,6 +11,7 @@ Paper map (table/figure -> registered name):
     Tab 4.1            instr       dependent-issue op latency
     Tab 4.2 / Fig 4.1  atomics     scatter contention
     Fig 4.2 / Tab 4.3  gemm        matmul throughput across dtypes
+    Tab 3.1 / Tab 4.3  gemm_lp     low-precision TensorCore ladder vs spec DB
     Fig 4.3-4.5        throttle    power/thermal clock governor
     Ch. 3+4 (whole)    dissect     probe suite -> fitted HardwareModel
     Ch. 1 + Fig 4.3    serving     engine TTFT/latency/throughput sweep
@@ -22,6 +23,7 @@ from . import (  # noqa: F401  (import side effect: registration)
     bandwidth,
     dissect,
     gemm,
+    gemm_lp,
     instr,
     memhier,
     scheduler,

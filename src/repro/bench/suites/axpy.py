@@ -11,7 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.hwmodel import TPU_V5E
+from repro.hw import TPU_V5E
 from repro.core.registry import register
 from repro.core.timing import time_fn
 from repro.kernels import api

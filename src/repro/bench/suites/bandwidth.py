@@ -3,7 +3,7 @@ bandwidth + block-shape (access-width) sweep."""
 from __future__ import annotations
 
 from repro.core import probes
-from repro.core.hwmodel import TPU_V5E
+from repro.hw import TPU_V5E
 from repro.core.registry import register
 
 from ..schema import BenchRecord

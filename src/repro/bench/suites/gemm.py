@@ -8,7 +8,7 @@ from __future__ import annotations
 
 from repro.core import probes
 from repro.core.autotune import choose_matmul_tiles
-from repro.core.hwmodel import T4_PAPER, TPU_V5E
+from repro.hw import T4_PAPER, TPU_V5E
 from repro.core.registry import register
 
 from ..schema import BenchRecord

@@ -8,7 +8,7 @@ hierarchy (VMEM/HBM) from the HardwareModel.
 from __future__ import annotations
 
 from repro.core import probes
-from repro.core.hwmodel import TPU_V5E
+from repro.hw import TPU_V5E
 from repro.core.registry import register
 
 from ..schema import BenchRecord

@@ -3,14 +3,23 @@
 
 Scores candidate Pallas block shapes with a two-term model (MXU compute vs.
 HBM<->VMEM traffic under the VMEM capacity constraint) and returns the
-argmin.  Used by the GEMM benchmark and the §Perf hillclimb.
+argmin.  Hardware facts come from the :mod:`repro.hw` spec database —
+every entry point takes ``hw=`` as a DB name or a ``HardwareModel``, so
+tiles can be chosen for any registered part.  Consumed by the GEMM bench
+suites, :mod:`repro.kernels.api` autotuning, and the ``benchmarks/hillclimb.py``
+entry point (which re-lowers cells under modified configs; that tool imports
+``repro.launch.cell``, not this module).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Sequence
+from typing import Sequence, Union
 
-from .hwmodel import TPU_V5E, HardwareModel
+from repro.hw import HardwareModel, resolve as _resolve_hw
+
+from .hwmodel import TPU_V5E
+
+HwLike = Union[str, HardwareModel]  # every hw= arg takes a DB name or a model
 
 
 @dataclass(frozen=True)
@@ -23,13 +32,46 @@ class TileChoice:
     notes: str = ""
 
 
-def _dtype_bytes(dtype: str) -> int:
-    sizes = {"bfloat16": 2, "float16": 2, "float32": 4, "int8": 1}
+_DTYPE_BYTES = {
+    "float64": 8,
+    "float32": 4,
+    "tf32": 4,
+    "bfloat16": 2,
+    "float16": 2,
+    "int8": 1,
+    "float8_e4m3fn": 1,
+    "float8_e5m2": 1,
+    "int4": 0.5,
+}
+
+# nearest-supported-precision chains for parts that don't publish a peak for
+# the requested dtype (documented fallback= semantics of HardwareModel.peak):
+# bf16 on a pre-Ampere GPU costs at its fp16 TensorCore rate, fp8 on a
+# pre-Hopper part at its int8 rate, everything else degrades to fp32.
+_PEAK_FALLBACK = {
+    "bfloat16": ("float16", "float32"),
+    "float16": ("bfloat16", "float32"),
+    "tf32": ("float32",),
+    "float8_e4m3fn": ("int8", "bfloat16", "float32"),
+    "float8_e5m2": ("int8", "bfloat16", "float32"),
+    "int4": ("int8", "float32"),
+    "int8": ("bfloat16", "float32"),
+}
+
+
+def peak_for(hw: HwLike, dtype: str) -> float:
+    """Per-dtype peak from the spec DB with the autotuner's fallback chain —
+    int8/bf16 tiles are costed at their own rates where the part publishes
+    them, at the nearest supported precision where it doesn't."""
+    return _resolve_hw(hw).peak(dtype, fallback=_PEAK_FALLBACK.get(dtype, ("float32",)))
+
+
+def _dtype_bytes(dtype: str) -> float:
     try:
-        return sizes[dtype]
+        return _DTYPE_BYTES[dtype]
     except KeyError:
         raise KeyError(
-            f"no byte-size entry for dtype {dtype!r}; known: {sorted(sizes)}"
+            f"no byte-size entry for dtype {dtype!r}; known: {sorted(_DTYPE_BYTES)}"
         ) from None
 
 
@@ -39,16 +81,19 @@ def dtype_name(dtype) -> str:
 
 
 def matmul_time_model(
-    m: int, k: int, n: int, bm: int, bk: int, bn: int, dtype: str, hw: HardwareModel
+    m: int, k: int, n: int, bm: int, bk: int, bn: int, dtype: str, hw: HwLike
 ) -> tuple[float, int]:
     """(predicted seconds, VMEM working set).
 
-    Traffic model: A is streamed once per N-block column, B once per M-block
-    row, C written once:
+    ``hw`` is a spec-DB name or a :class:`HardwareModel`.  Traffic model: A
+    is streamed once per N-block column, B once per M-block row, C written
+    once:
         bytes = (n/bn) * m*k + (m/bm) * k*n + m*n
-    Compute: 2mnk / peak(dtype), assuming full MXU utilization for
+    Compute: 2mnk / peak(dtype) via :func:`peak_for` (per-dtype DB peaks
+    with the nearest-precision fallback), assuming full MXU utilization for
     128-aligned tiles, derated for misaligned ones.
     """
+    hw = _resolve_hw(hw)
     eb = _dtype_bytes(dtype)
     traffic = (n // bn) * m * k * eb + (m // bm) * k * n * eb + m * n * eb
     t_mem = traffic / hw.main_memory_Bps
@@ -57,8 +102,8 @@ def matmul_time_model(
     for b in (bm, bk, bn):
         if b % align:
             eff *= max(b / (align * -(-b // align)), 0.25)
-    t_compute = 2.0 * m * n * k / (hw.peak(dtype) * eff)
-    vmem = (bm * bk + bk * bn + bm * bn) * eb + bm * bn * 4  # + fp32 acc
+    t_compute = 2.0 * m * n * k / (peak_for(hw, dtype) * eff)
+    vmem = int((bm * bk + bk * bn + bm * bn) * eb) + bm * bn * 4  # + fp32 acc
     return max(t_mem, t_compute), vmem
 
 
@@ -67,10 +112,11 @@ def choose_matmul_tiles(
     k: int,
     n: int,
     dtype: str = "bfloat16",
-    hw: HardwareModel = TPU_V5E,
+    hw: HwLike = TPU_V5E,
     candidates: Sequence[int] = (128, 256, 512, 1024),
     vmem_budget_frac: float = 0.8,
 ) -> TileChoice:
+    hw = _resolve_hw(hw)
     budget = int(hw.staging_bytes * vmem_budget_frac)
     best: TileChoice | None = None
     for bm in candidates:
@@ -98,13 +144,14 @@ def choose_attention_chunk(
     head_dim: int,
     n_heads_local: int,
     dtype: str = "bfloat16",
-    hw: HardwareModel = TPU_V5E,
+    hw: HwLike = TPU_V5E,
     candidates: Sequence[int] = (128, 256, 512, 1024, 2048),
     vmem_budget_frac: float = 0.6,
 ) -> int:
     """KV-chunk size for blockwise attention: biggest chunk whose working set
     (q tile + kv chunk + acc) fits the VMEM budget — larger chunks amortize
     HBM streaming (the Ch.1 width lesson applied to attention)."""
+    hw = _resolve_hw(hw)
     eb = _dtype_bytes(dtype)
     budget = hw.staging_bytes * vmem_budget_frac
     best = candidates[0]
@@ -124,7 +171,7 @@ def choose_ssm_chunk(
     head_dim: int,
     state_dim: int,
     dtype: str = "float32",
-    hw: HardwareModel = TPU_V5E,
+    hw: HwLike = TPU_V5E,
     candidates: Sequence[int] = (64, 128, 256, 512),
     vmem_budget_frac: float = 0.6,
 ) -> int:
@@ -132,6 +179,7 @@ def choose_ssm_chunk(
     working set (u/y tiles, B/C chunks, and the (chunk, chunk) intra-chunk
     decay matrix) fits the VMEM budget — same width-vs-capacity trade as
     :func:`choose_attention_chunk`, with the quadratic score tile dominating."""
+    hw = _resolve_hw(hw)
     eb = _dtype_bytes(dtype)
     budget = hw.staging_bytes * vmem_budget_frac
     best = candidates[0]

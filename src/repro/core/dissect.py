@@ -5,18 +5,28 @@ measure mode: runs every probe on the live backend (CPU container: the
 fitted model describes the host — end-to-end methodology validation, since
 the host's real L1/L2/L3 plateaus must emerge from our pointer-chase).
 
-model mode: evaluates the same probe grid analytically against a preset
-HardwareModel (TPU v5e) — the numbers EXPERIMENTS.md reports for the target.
+model mode: evaluates the same probe grid analytically against any part in
+the :mod:`repro.hw` spec database (``hw=`` takes a name like ``"T4"`` or a
+``HardwareModel``; default TPU v5e — the numbers EXPERIMENTS.md reports for
+the target).  :func:`dissect_compare` runs model mode across several
+generations and emits the paper's T4-vs-P4-vs-V100 comparison as records.
+
+Measure mode registers the fitted model into the same database (via
+``fit_from_probes``), so a dissected host is immediately comparable:
+``repro.hw.compare("measured-host", "T4")``.
 """
 from __future__ import annotations
 
 import json
 from dataclasses import dataclass
 from pathlib import Path
-from typing import Optional
+from typing import Iterable, Optional, Union
+
+from repro.hw import HardwareModel, resolve as _resolve_hw
+from repro.hw import compare as _hw_compare
 
 from . import probes
-from .hwmodel import TPU_V5E, HardwareModel, fit_from_probes
+from .hwmodel import fit_from_probes
 from .serialization import SCHEMA_VERSION, EnvFingerprint, probe_to_dict
 
 
@@ -117,17 +127,23 @@ def _predict_stream(hw: HardwareModel, sizes) -> list[float]:
 
 
 def _predict_matmul(hw: HardwareModel, sizes, dtype="bfloat16") -> list[float]:
-    peak = hw.peak(dtype)
+    peak = hw.peak(dtype, fallback=("float16", "float32"))
+    eb = {"float64": 8, "float32": 4, "int8": 1}.get(dtype, 2)
     out = []
     for n in sizes:
         flops = 2 * n**3
         t_compute = flops / peak
-        t_mem = 3 * n * n * 2 / hw.main_memory_Bps
+        t_mem = 3 * n * n * eb / hw.main_memory_Bps
         out.append(flops / max(t_compute, t_mem) / 1e9)
     return out
 
 
-def dissect_model(hw: HardwareModel = TPU_V5E, out_path: Optional[str] = None) -> DissectReport:
+def dissect_model(
+    hw: Union[str, HardwareModel] = "tpu-v5e",
+    out_path: Optional[str] = None,
+    dtype: str = "bfloat16",
+) -> DissectReport:
+    hw = _resolve_hw(hw)
     sizes = [1 << p for p in range(12, 31)]
     bw_sizes = [1 << p for p in range(18, 31)]
     mm_sizes = (256, 512, 1024, 2048, 4096, 8192)
@@ -142,8 +158,8 @@ def dissect_model(hw: HardwareModel = TPU_V5E, out_path: Optional[str] = None) -
                 "x": bw_sizes, "y": _predict_stream(hw, bw_sizes), "unit": "GB/s", "meta": {},
             },
             "matmul_throughput": {
-                "x": [f"bfloat16:{n}" for n in mm_sizes],
-                "y": _predict_matmul(hw, mm_sizes), "unit": "GFLOP/s", "meta": {},
+                "x": [f"{dtype}:{n}" for n in mm_sizes],
+                "y": _predict_matmul(hw, mm_sizes, dtype), "unit": "GFLOP/s", "meta": {},
             },
         },
         detected_levels=[(l.latency_ns, l.size_bytes or None) for l in hw.levels],
@@ -151,3 +167,30 @@ def dissect_model(hw: HardwareModel = TPU_V5E, out_path: Optional[str] = None) -
     if out_path:
         Path(out_path).write_text(report.to_json())
     return report
+
+
+def dissect_compare(
+    hws: Iterable[Union[str, HardwareModel]] = ("P4", "T4", "V100"),
+    baseline: Union[str, HardwareModel] = "T4",
+    dtypes: Optional[Iterable[str]] = None,
+) -> dict:
+    """Model-mode dissection across generations — the paper's comparison
+    tables as one record.
+
+    Runs :func:`dissect_model` for every part and pairs each against
+    ``baseline`` with :func:`repro.hw.compare`.  The default grid is the
+    paper's own column set (P4/T4/V100); pass successors ("A100", "H100",
+    "B200") to extend the table the way the sequel dissections do.
+    """
+    base = _resolve_hw(baseline)
+    parts = [_resolve_hw(h) for h in hws]
+    return {
+        "baseline": base.name,
+        "parts": [h.name for h in parts],
+        "reports": {h.name: dissect_model(h).probe_results for h in parts},
+        "comparisons": {
+            h.name: _hw_compare(h, base, dtypes=dtypes)
+            for h in parts
+            if h.name != base.name
+        },
+    }

@@ -1,172 +1,29 @@
-"""HardwareModel — the machine-readable analogue of the paper's Table 3.1.
+"""Back-compat shim — the hardware model moved to :mod:`repro.hw`.
 
-The paper's meta-contribution is a *quantitative hardware model distilled
-from microbenchmarks*.  ``HardwareModel`` is that object: every consumer
-(roofline, autotuner, straggler detector, modeled benchmarks) reads hardware
-facts from here, never from scattered constants.
+``HardwareModel`` grew from two hard-coded presets into the multi-generation
+spec database in ``repro.hw`` (P4/T4/V100 from the paper, A100/H100/B200
+from the sequel dissections, TPU v5e).  This module keeps the historical
+import path alive; new code should use ``repro.hw`` directly:
 
-Presets:
-  - ``TPU_V5E``   the dry-run/roofline target (per the assignment constants:
-                  197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI).
-  - ``T4_PAPER``  the paper's own T4 findings (Table 3.1 / 4.3) — used to
-                  validate our throttle model and benchmark structure against
-                  the paper's published numbers.
-  - ``fit_from_probes`` builds one from dissect.py probe data (measure mode).
+    import repro.hw as hw
+    hw.get("T4").peak("int8")
 """
-from __future__ import annotations
-
-import json
-from dataclasses import asdict, dataclass
-
-
-@dataclass(frozen=True)
-class MemoryLevel:
-    name: str
-    size_bytes: int  # capacity (0 = unbounded, e.g. DRAM/HBM)
-    latency_ns: float  # dependent-load latency
-    bandwidth_Bps: float  # sustained streaming bandwidth
-    line_bytes: int = 0
-    shared: bool = False  # shared across cores/SMs or private
-
-
-@dataclass(frozen=True)
-class HardwareModel:
-    name: str
-    # compute
-    peak_flops: dict  # dtype name -> FLOP/s (per chip)
-    clock_hz: float
-    num_cores: int
-    # memory
-    levels: tuple  # tuple[MemoryLevel, ...] fastest-first
-    main_memory_Bps: float
-    main_memory_bytes: int
-    # on-chip staging (VMEM on TPU, smem+L1 on GPU)
-    staging_bytes: int
-    staging_Bps: float
-    # interconnect
-    ici_Bps_per_link: float = 0.0
-    ici_links: int = 0
-    dci_Bps: float = 0.0  # cross-pod (data-center interconnect)
-    # power/thermal envelope (throttle model inputs, paper §4.5)
-    power_limit_w: float = 0.0
-    max_temp_c: float = 0.0
-    idle_power_w: float = 0.0
-
-    def peak(self, dtype: str) -> float:
-        if dtype in self.peak_flops:
-            return self.peak_flops[dtype]
-        raise KeyError(f"{self.name}: no peak for {dtype!r}")
-
-    def mxu_align(self) -> int:
-        return 128
-
-    def to_json(self) -> str:
-        d = asdict(self)
-        d["levels"] = [asdict(l) for l in self.levels]
-        return json.dumps(d, indent=2)
-
-    @staticmethod
-    def from_json(s: str) -> "HardwareModel":
-        d = json.loads(s)
-        d["levels"] = tuple(MemoryLevel(**l) for l in d["levels"])
-        d["peak_flops"] = dict(d["peak_flops"])
-        return HardwareModel(**d)
-
-
-# ---------------------------------------------------------------------------
-# TPU v5e — the roofline/dry-run target
-# ---------------------------------------------------------------------------
-TPU_V5E = HardwareModel(
-    name="tpu-v5e",
-    peak_flops={
-        "bfloat16": 197e12,
-        "float32": 49.25e12,  # MXU f32 path ~ bf16/4
-        "int8": 394e12,
-    },
-    clock_hz=1.70e9,  # ~940 MHz x2 issue equivalent; per-chip effective
-    num_cores=1,  # v5e is single-TensorCore per chip
-    levels=(
-        MemoryLevel("vreg", 512 * 1024, 0.6, 0.0, line_bytes=4 * 128),
-        MemoryLevel("vmem", 128 * 1024 * 1024, 12.0, 3.3e12, line_bytes=4 * 8 * 128),
-        MemoryLevel("hbm", 16 * 1024**3, 450.0, 819e9, line_bytes=512, shared=True),
-    ),
-    main_memory_Bps=819e9,
-    main_memory_bytes=16 * 1024**3,
-    staging_bytes=128 * 1024 * 1024,
-    staging_Bps=3.3e12,
-    ici_Bps_per_link=50e9,  # per the assignment: ~50 GB/s/link
-    ici_links=4,  # 2D torus
-    dci_Bps=25e9,  # cross-pod effective per-chip share (assumption, see DESIGN)
-    power_limit_w=170.0,
-    max_temp_c=90.0,
-    idle_power_w=60.0,
+from repro.hw import (  # noqa: F401  (re-exported legacy surface)
+    HardwareModel,
+    MemoryLevel,
+    T4_PAPER,
+    TPU_V5E,
+    UnknownDtypeError,
+    fit_from_probes,
 )
+from repro.hw.specs import TPU_LIKE_DTYPES_T4  # noqa: F401
 
-
-# ---------------------------------------------------------------------------
-# The paper's T4 (Table 3.1 / 4.3, converted to SI) — validation anchor
-# ---------------------------------------------------------------------------
-_T4_CLK = 1.59e9  # 1590 MHz max graphics clock
-
-TPU_LIKE_DTYPES_T4 = {
-    # paper Table 4.3 measured matmul throughput (not theoretical peaks)
-    "float64": 253e9,
-    "float32": 7.174e12,
-    "float16": 41.616e12,
-    "int8": 74.934e12,
-    "int4": 114.384e12,
-    "int1": 552.230e12,
-}
-
-T4_PAPER = HardwareModel(
-    name="nvidia-t4-paper",
-    peak_flops=dict(TPU_LIKE_DTYPES_T4),
-    clock_hz=_T4_CLK,
-    num_cores=40,  # SMs
-    levels=(
-        # latency_ns = cycles / 1.59 GHz; sizes from Table 3.1
-        MemoryLevel("L1", 64 * 1024, 32 / _T4_CLK * 1e9, 58.8 * 40 * _T4_CLK, 32),
-        MemoryLevel("L2", 4096 * 1024, 188 / _T4_CLK * 1e9, 1.27e12, 64, shared=True),
-        MemoryLevel("global", 15 * 1024**3, 616 / _T4_CLK * 1e9, 220e9, 512, shared=True),
-    ),
-    main_memory_Bps=220e9,  # measured (theoretical 320; ratio 68.8%, Tab 3.1)
-    main_memory_bytes=15 * 1024**3,
-    staging_bytes=64 * 1024 * 40,  # shared memory per chip
-    staging_Bps=3.662e12,  # Tab 3.1 actual shared bw
-    power_limit_w=70.0,
-    max_temp_c=85.0,
-    idle_power_w=20.0,
-)
-
-
-# ---------------------------------------------------------------------------
-def fit_from_probes(
-    name: str,
-    plateau_levels: list,  # [(latency_ns, size_bytes_boundary_or_None), ...]
-    stream_Bps: float,
-    matmul_flops: dict,
-    clock_hz: float = 0.0,
-) -> HardwareModel:
-    """Build a HardwareModel from dissect.py probe output (measure mode)."""
-    levels = []
-    for i, (lat, size) in enumerate(plateau_levels):
-        levels.append(
-            MemoryLevel(
-                name=f"level{i}",
-                size_bytes=int(size) if size else 0,
-                latency_ns=float(lat),
-                bandwidth_Bps=stream_Bps,
-            )
-        )
-    main = levels[-1] if levels else MemoryLevel("main", 0, 100.0, stream_Bps)
-    return HardwareModel(
-        name=name,
-        peak_flops=dict(matmul_flops),
-        clock_hz=clock_hz,
-        num_cores=1,
-        levels=tuple(levels),
-        main_memory_Bps=stream_Bps,
-        main_memory_bytes=0,
-        staging_bytes=levels[0].size_bytes if levels else 0,
-        staging_Bps=stream_Bps,
-    )
+__all__ = [
+    "HardwareModel",
+    "MemoryLevel",
+    "T4_PAPER",
+    "TPU_LIKE_DTYPES_T4",
+    "TPU_V5E",
+    "UnknownDtypeError",
+    "fit_from_probes",
+]

@@ -2,8 +2,10 @@
 step function with full input/output shardings and donation.
 
 This is the single source of truth used by the dry-run, the roofline
-report, and the §Perf hillclimb (which re-lowers cells under modified
-configs).
+report (``benchmarks/roofline.py``), and the §Perf hillclimb
+(``benchmarks/hillclimb.py``, which imports this module to re-lower cells
+under modified configs — the dependency runs from that entry point into
+here, never the reverse).
 """
 from __future__ import annotations
 

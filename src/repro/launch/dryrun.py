@@ -29,7 +29,15 @@ from repro.perfmodel.hlo import collective_bytes  # noqa: E402
 from repro.perfmodel.roofline import roofline  # noqa: E402
 
 
-def run_cell(cell: Cell, out_dir: Path, save_hlo: bool = False, ref: dict | None = None) -> dict:
+def run_cell(
+    cell: Cell,
+    out_dir: Path,
+    save_hlo: bool = False,
+    ref: dict | None = None,
+    hw: str = "tpu-v5e",
+) -> dict:
+    """Lower+compile one cell and record costs + roofline terms against
+    ``hw`` (any part in the repro.hw spec database; default the TPU target)."""
     t0 = time.time()
     lowered = cell.lower()
     t_lower = time.time() - t0
@@ -65,9 +73,11 @@ def run_cell(cell: Cell, out_dir: Path, save_hlo: bool = False, ref: dict | None
         kind=cell.shape.kind,
         n_params_active=cell.n_params_active,
         tokens=tokens,
+        hw=hw,
     )
     rec = {
         "cell": cell.name,
+        "hw": rt.hw,
         "arch": cell.cfg.name,
         "shape": cell.shape.name,
         "mesh": dict(cell.mesh.shape),
@@ -99,6 +109,8 @@ def main(argv=None) -> int:
     ap.add_argument("--save-hlo", action="store_true")
     ap.add_argument("--skip-existing", action="store_true")
     ap.add_argument("--microbatches", type=int, default=None, help="override per-arch value")
+    ap.add_argument("--hw", default="tpu-v5e",
+                    help="repro.hw spec-DB part to roofline against (name or alias)")
     args = ap.parse_args(argv)
 
     out_dir = Path(args.out)
@@ -145,7 +157,8 @@ def main(argv=None) -> int:
                         ref = cost_reference(cfg, shape)
                         print(f"[ref]  {arch} x {shape_name}: "
                               f"{ref['global_flops']/1e12:.1f} TF global ({time.time()-t0:.0f}s)")
-                    rec = run_cell(cell, out_dir, save_hlo=args.save_hlo, ref=ref)
+                    rec = run_cell(cell, out_dir, save_hlo=args.save_hlo, ref=ref,
+                                   hw=args.hw)
                     mem_gib = rec["memory"]["peak_hbm_bytes"] / 2**30
                     an_gib = rec["analytic_memory"]["analytic_peak_bytes"] / 2**30
                     print(

@@ -9,12 +9,20 @@ empirically — so the assignment's "global / chips" division is already done.)
 The dominant term is the bottleneck; the roofline fraction reported in §Perf
 is MODEL_FLOPS_time / max(term) — how close useful model math runs to the
 hardware bound.
+
+``hw=`` takes any part registered in the :mod:`repro.hw` spec database (a
+name like ``"T4"`` or a ``HardwareModel``); :func:`roofline_across` sweeps
+the same workload over several generations at once — the paper's
+cross-generation comparison applied to a whole compiled program instead of
+a single kernel.  Parts with no published interconnect (single-chip cards
+like the T4) get a zero collective term.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Iterable, Union
 
-from repro.core.hwmodel import TPU_V5E, HardwareModel
+from repro.hw import HardwareModel, resolve as _resolve_hw
 
 from .costs import CompiledCosts
 from .hlo import CollectiveStats
@@ -31,9 +39,11 @@ class RooflineTerms:
     useful_ratio: float  # model_flops / hlo_flops_global
     roofline_fraction: float  # model compute time / dominant bound
     chips: int
+    hw: str = ""  # spec-DB part the terms were computed against
 
     def summary(self) -> dict:
         return {
+            "hw": self.hw,
             "compute_s": self.compute_s,
             "memory_s": self.memory_s,
             "collective_s": self.collective_s,
@@ -60,13 +70,18 @@ def roofline(
     kind: str,
     n_params_active: float,
     tokens: float,
-    hw: HardwareModel = TPU_V5E,
+    hw: Union[str, HardwareModel] = "tpu-v5e",
     dtype: str = "bfloat16",
 ) -> RooflineTerms:
-    peak = hw.peak(dtype)
+    hw = _resolve_hw(hw)
+    peak = hw.peak(dtype, fallback=("float16", "float32"))
     t_c = costs.flops_per_device / peak
     t_m = costs.bytes_per_device / hw.main_memory_Bps
-    t_x = coll.per_device_bytes / hw.ici_Bps_per_link
+    # parts without a published interconnect (single-chip cards) have no
+    # collective bound; their collective term is zero by construction
+    t_x = (
+        coll.per_device_bytes / hw.ici_Bps_per_link if hw.ici_Bps_per_link else 0.0
+    )
     terms = {"compute": t_c, "memory": t_m, "collective": t_x}
     dominant = max(terms, key=terms.get)
     mf = model_flops(kind, n_params_active, tokens)
@@ -85,4 +100,29 @@ def roofline(
         useful_ratio=useful,
         roofline_fraction=frac,
         chips=chips,
+        hw=hw.name,
     )
+
+
+def roofline_across(
+    costs: CompiledCosts,
+    coll: CollectiveStats,
+    chips: int,
+    kind: str,
+    n_params_active: float,
+    tokens: float,
+    hws: Iterable[Union[str, HardwareModel]] = ("tpu-v5e", "T4", "A100", "H100"),
+    dtype: str = "bfloat16",
+) -> dict:
+    """The same workload rooflined against several generations at once.
+
+    Returns ``{part name: RooflineTerms}`` — one cross-generation comparison
+    record per part, ordered as given.  This is what ``benchmarks/roofline.py
+    --hw`` renders as extra columns.
+    """
+    out = {}
+    for h in hws:
+        rt = roofline(costs, coll, chips, kind, n_params_active, tokens,
+                      hw=h, dtype=dtype)
+        out[rt.hw] = rt
+    return out

@@ -27,6 +27,8 @@ _SMOKE_OVERRIDES = {
        for b in ("pallas", "xla")},
     **{f"scheduler[{b}]": {"rows_per_program": 16, "programs": (1, 2)}
        for b in ("pallas", "xla")},
+    **{f"gemm_lp[{b}]": {"sizes": (64,), "dtypes": ("float32", "int8")}
+       for b in ("pallas", "xla")},
     **{f"serving[{b}]": {"requests": 2, "prompt_lens": (4,), "out_lens": (3,)}
        for b in ("pallas", "xla")},
     **{f"serving_scaled[{b}]": {"tps": (1,), "replicas": (1, 2), "requests": 2,
@@ -60,7 +62,9 @@ def test_all_paper_benchmarks_registered():
 def test_runner_select_filters_by_prefix():
     # a bare prefix sweeps up the backend-parameterized variants too —
     # `run gemm` is the paper-style side-by-side comparison
-    assert runner.select(["gem"]) == ["gemm", "gemm[pallas]", "gemm[xla]"]
+    assert runner.select(["gem"]) == [
+        "gemm", "gemm[pallas]", "gemm[xla]", "gemm_lp[pallas]", "gemm_lp[xla]",
+    ]
     assert runner.select(["gemm[xla]"]) == ["gemm[xla]"]
     assert runner.select() == registry.names()
 
@@ -69,7 +73,8 @@ def test_runner_select_filters_by_prefix():
     "name",
     ["atomics", "axpy", "bandwidth", "gemm", "instr", "memhier", "scheduler", "throttle",
      "bandwidth[pallas]", "bandwidth[xla]", "memhier[pallas]", "memhier[xla]",
-     "scheduler[pallas]", "scheduler[xla]", "serving[pallas]", "serving[xla]",
+     "scheduler[pallas]", "scheduler[xla]", "gemm_lp[pallas]", "gemm_lp[xla]",
+     "serving[pallas]", "serving[xla]",
      "serving_scaled[pallas]", "serving_scaled[xla]"],
 )
 def test_quick_mode_produces_valid_records(quick_records, name):

@@ -1,0 +1,267 @@
+"""repro.hw spec database: registry semantics, per-dtype peak lookups,
+JSON round-trips, the paper's Table-4.3 dtype ladder, and the hw=-by-name
+contract of every consumer (roofline / dissect / autotune / gemm_lp)."""
+import json
+import math
+
+import pytest
+
+import repro.hw as hw
+from repro.hw import HardwareModel, MemoryLevel, UnknownDtypeError
+
+
+# ---------------------------------------------------------------------------
+# registry: get / aliases / resolve / register
+# ---------------------------------------------------------------------------
+def test_presets_registered():
+    assert set(hw.names()) >= {
+        "tpu-v5e", "nvidia-t4-paper", "nvidia-p4", "nvidia-v100",
+        "nvidia-a100-sxm", "nvidia-h100-sxm", "nvidia-b200",
+    }
+
+
+def test_get_normalizes_and_aliases():
+    t4 = hw.get("nvidia-t4-paper")
+    assert hw.get("T4") is t4
+    assert hw.get("t4") is t4
+    assert hw.get("Tesla T4") is t4  # space -> dash, case-folded
+    assert hw.get("tpu_v5e").name == "tpu-v5e"  # underscore -> dash
+
+
+def test_get_unknown_lists_registered():
+    with pytest.raises(KeyError, match="nvidia-t4-paper"):
+        hw.get("gtx-9000")
+
+
+def test_resolve_name_model_and_type_error():
+    t4 = hw.get("T4")
+    assert hw.resolve("T4") is t4
+    assert hw.resolve(t4) is t4
+    with pytest.raises(TypeError):
+        hw.resolve(42)
+
+
+def test_register_conflicts_and_unregister():
+    part = HardwareModel(
+        name="test-part", peak_flops={"float32": 1e12}, clock_hz=1e9,
+        num_cores=1, levels=(), main_memory_Bps=1e11, main_memory_bytes=1,
+        staging_bytes=1, staging_Bps=1e11,
+    )
+    hw.register(part, aliases=("tp0",))
+    try:
+        with pytest.raises(ValueError, match="already registered"):
+            hw.register(part)
+        with pytest.raises(ValueError, match="already taken"):
+            hw.register(
+                HardwareModel(
+                    name="test-part-2", peak_flops={}, clock_hz=0, num_cores=0,
+                    levels=(), main_memory_Bps=0, main_memory_bytes=0,
+                    staging_bytes=0, staging_Bps=0,
+                ),
+                aliases=("tp0",),
+            )
+        # overwrite=True is the fit_from_probes re-run path
+        hw.register(part, overwrite=True)
+        assert hw.get("tp0") is part
+    finally:
+        hw.unregister("test-part")
+        hw.unregister("test-part-2")
+    with pytest.raises(KeyError):
+        hw.get("test-part")
+    with pytest.raises(KeyError):
+        hw.get("tp0")  # aliases die with the registration
+
+
+# ---------------------------------------------------------------------------
+# per-dtype peaks: lookup, helpful error, fallback chain
+# ---------------------------------------------------------------------------
+def test_peak_lookup_and_dtypes_order():
+    t4 = hw.get("T4")
+    assert t4.peak("int8") == pytest.approx(74.934e12)
+    assert t4.supports("float16") and not t4.supports("bfloat16")
+    ds = t4.dtypes()
+    assert ds[0] == "int1"  # fastest first
+    assert list(ds) == sorted(ds, key=t4.peak_flops.get, reverse=True)
+
+
+def test_unknown_dtype_error_lists_available():
+    t4 = hw.get("T4")
+    with pytest.raises(UnknownDtypeError) as ei:
+        t4.peak("bfloat16")
+    msg = str(ei.value)
+    assert "bfloat16" in msg and "float16" in msg and "fallback" in msg
+    # back-compat: callers that caught the old bare KeyError still work
+    with pytest.raises(KeyError):
+        t4.peak("bfloat16")
+
+
+def test_peak_fallback_single_and_chain():
+    t4 = hw.get("T4")
+    assert t4.peak("bfloat16", fallback="float16") == t4.peak("float16")
+    # chain: first supported entry wins
+    assert t4.peak("tf32", fallback=("bfloat16", "float32")) == t4.peak("float32")
+    with pytest.raises(UnknownDtypeError):
+        t4.peak("bfloat16", fallback="fp6")  # fallback itself unsupported
+
+
+def test_level_lookup():
+    t4 = hw.get("T4")
+    assert t4.level("L2").shared
+    with pytest.raises(KeyError, match="L1, L2, global"):
+        t4.level("L9")
+
+
+# ---------------------------------------------------------------------------
+# serialization: every registered part round-trips
+# ---------------------------------------------------------------------------
+def test_every_registered_model_roundtrips_json():
+    for part in hw.models():
+        back = HardwareModel.from_json(part.to_json())
+        assert back == part, part.name
+        assert isinstance(back.levels, tuple)
+        assert all(isinstance(l, MemoryLevel) for l in back.levels)
+        json.loads(part.to_json())  # stays plain JSON
+
+
+# ---------------------------------------------------------------------------
+# query / compare
+# ---------------------------------------------------------------------------
+def test_query_by_dtype_min_peak_sorted():
+    fast = hw.query(dtype="int8", min_peak=500e12)
+    names = [p.name for p in fast]
+    assert names == ["nvidia-b200", "nvidia-h100-sxm", "nvidia-a100-sxm"]
+    # every hit really clears the gate
+    assert all(p.peak("int8") >= 500e12 for p in fast)
+
+
+def test_query_vendor_arch_power_predicate():
+    assert [p.name for p in hw.query(arch="turing")] == ["nvidia-t4-paper"]
+    nv = hw.query(vendor="NVIDIA")
+    assert len(nv) >= 6 and all(p.vendor == "nvidia" for p in nv)
+    low_power = hw.query(vendor="nvidia", max_power_w=80.0)
+    assert {p.name for p in low_power} == {"nvidia-t4-paper", "nvidia-p4"}
+    pre_volta = hw.query(predicate=lambda p: 0 < p.year < 2017)
+    assert [p.name for p in pre_volta] == ["nvidia-p4"]
+
+
+def test_query_min_peak_requires_dtype():
+    with pytest.raises(ValueError, match="requires dtype"):
+        hw.query(min_peak=1e12)
+
+
+def test_compare_t4_vs_p4_matches_paper_story():
+    c = hw.compare("T4", "P4")
+    assert c["a"] == "nvidia-t4-paper" and c["b"] == "nvidia-p4"
+    # shared dtypes only, unless pinned
+    assert "int4" not in c["peak_ratio"]
+    # Turing TensorCore fp16 vs Pascal's crippled fp16: the ~467x headline
+    assert c["peak_ratio"]["float16"] == pytest.approx(41.616 / 0.089, rel=1e-3)
+    assert c["peak_ratio"]["int8"] > 1.0
+    assert c["main_memory_Bps_ratio"] == pytest.approx(220 / 192, rel=1e-3)
+    pinned = hw.compare("T4", "P4", dtypes=["float32"])
+    assert list(pinned["peak_ratio"]) == ["float32"]
+
+
+# ---------------------------------------------------------------------------
+# paper validation: the T4 Table-4.3 dtype ladder
+# ---------------------------------------------------------------------------
+def test_t4_ladder_matches_paper_table_4_3():
+    t4 = hw.get("T4")
+    assert t4.peak("float16") / t4.peak("float32") == pytest.approx(5.80, abs=0.02)
+    assert t4.peak("int8") / t4.peak("float32") == pytest.approx(10.45, abs=0.02)
+    assert t4.peak("int8") / t4.peak("float16") == pytest.approx(1.80, abs=0.01)
+    # sub-byte modes keep climbing (int4 > int8, int1 > int4)
+    assert t4.peak("int1") > t4.peak("int4") > t4.peak("int8")
+
+
+def test_fit_from_probes_registers_queryable_part():
+    fitted = hw.fit_from_probes(
+        "fit-test-host",
+        plateau_levels=[(1.0, 32 * 1024), (10.0, None)],
+        stream_Bps=50e9,
+        matmul_flops={"float32": 2e12},
+    )
+    try:
+        assert hw.get("fit-test-host") is fitted
+        assert fitted.source == "fit_from_probes"
+        # re-running a fit must not raise (overwrite semantics)
+        hw.fit_from_probes(
+            "fit-test-host", plateau_levels=[(1.5, None)], stream_Bps=60e9,
+            matmul_flops={"float32": 2.5e12},
+        )
+        c = hw.compare("fit-test-host", "T4")
+        assert c["peak_ratio"]["float32"] == pytest.approx(2.5e12 / 7.174e12)
+    finally:
+        hw.unregister("fit-test-host")
+
+
+# ---------------------------------------------------------------------------
+# consumers take hw= by DB name
+# ---------------------------------------------------------------------------
+def test_roofline_accepts_db_names():
+    from repro.perfmodel.costs import CompiledCosts
+    from repro.perfmodel.hlo import CollectiveStats
+    from repro.perfmodel.roofline import roofline, roofline_across
+
+    costs = CompiledCosts(
+        flops_per_device=1e12, bytes_per_device=1e9, transcendentals=0,
+        arg_bytes=0, out_bytes=0, temp_bytes=0, alias_bytes=0, code_bytes=0,
+    )
+    coll = CollectiveStats(per_device_bytes=1e9)
+    terms = {}
+    for name in ("tpu-v5e", "T4", "A100", "H100"):
+        rt = roofline(costs, coll, chips=1, kind="train",
+                      n_params_active=1e8, tokens=1e3, hw=name, dtype="bfloat16")
+        terms[name] = rt
+        assert rt.hw == hw.get(name).name
+        assert math.isfinite(rt.compute_s) and rt.compute_s > 0
+    # T4 has no interconnect: collective term must be zero, not a crash
+    assert terms["T4"].collective_s == 0.0
+    assert terms["tpu-v5e"].collective_s > 0.0
+    # faster part, less compute time
+    assert terms["H100"].compute_s < terms["T4"].compute_s
+    across = roofline_across(costs, coll, chips=1, kind="train",
+                             n_params_active=1e8, tokens=1e3,
+                             hws=("T4", "P4"))
+    assert set(across) == {"nvidia-t4-paper", "nvidia-p4"}
+
+
+def test_dissect_model_and_compare_accept_names():
+    from repro.core.dissect import dissect_compare, dissect_model
+
+    rep = dissect_model("T4", dtype="float16")
+    assert rep.hardware.name == "nvidia-t4-paper"
+    assert max(rep.probe_results["matmul_throughput"]["y"]) <= 41.616e3  # GFLOP/s
+    cmp_ = dissect_compare(hws=("P4", "T4"), baseline="T4")
+    assert cmp_["baseline"] == "nvidia-t4-paper"
+    assert set(cmp_["comparisons"]) == {"nvidia-p4"}
+    assert "nvidia-t4-paper" in cmp_["reports"]
+
+
+def test_autotune_reads_per_dtype_peaks_from_db():
+    from repro.core.autotune import choose_matmul_tiles, matmul_time_model, peak_for
+
+    # by name, with fallback: T4 publishes no bf16 -> costed at its fp16 rate
+    assert peak_for("T4", "bfloat16") == hw.get("T4").peak("float16")
+    t_int8, _ = matmul_time_model(512, 512, 512, 128, 128, 128, "int8", "T4")
+    t_fp32, _ = matmul_time_model(512, 512, 512, 128, 128, 128, "float32", "T4")
+    assert t_int8 < t_fp32  # cheaper bytes AND higher peak
+    choice = choose_matmul_tiles(512, 512, 512, dtype="int8", hw="T4")
+    assert choice.predicted_s > 0 and choice.vmem_bytes > 0
+
+
+def test_gemm_lp_emits_records_for_three_dtypes():
+    from repro.bench.suites.gemm_lp import bench_gemm_lp
+
+    recs = bench_gemm_lp(sizes=(64,), dtypes=("float32", "bfloat16", "int8"),
+                         hw="T4", backend="xla")
+    by_name = {r.name: r for r in recs}
+    measured_dts = {r.x.split(":")[0] for r in recs
+                    if r.measured and r.name.startswith("gemm_lp_") and ":" in str(r.x)}
+    assert {"float32", "bfloat16", "int8"} <= measured_dts
+    # modeled ladder rides along, tagged unmeasured, with the paper ratios
+    ratio = by_name["gemm_lp_model_nvidia-t4-paper_ratio_int8_over_float16"]
+    assert not ratio.measured and ratio.better == "info"
+    assert ratio.value == pytest.approx(1.80, abs=0.01)
+    assert by_name["gemm_lp_model_nvidia-t4-paper_ratio_float16_over_float32"].value \
+        == pytest.approx(5.80, abs=0.02)

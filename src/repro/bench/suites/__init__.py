@@ -16,6 +16,7 @@ Paper map (table/figure -> registered name):
     Ch. 3+4 (whole)    dissect     probe suite -> fitted HardwareModel
     Ch. 1 + Fig 4.3    serving     engine TTFT/latency/throughput sweep
     Ch. 1 (scale-out)  serving_scaled  cluster sweep over tp x replicas
+    §4.5 (contrast)    serving_chaos   goodput/availability, clean vs faulted
 """
 from . import (  # noqa: F401  (import side effect: registration)
     atomics,
@@ -28,6 +29,7 @@ from . import (  # noqa: F401  (import side effect: registration)
     memhier,
     scheduler,
     serving,
+    serving_chaos,
     serving_scaled,
     throttle,
 )

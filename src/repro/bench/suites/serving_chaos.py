@@ -1,0 +1,146 @@
+"""Chaos serving benchmark — availability and goodput under injected faults.
+
+The paper's methodology is contrast under controlled stress (the same
+workload measured clean vs. thermally throttled, §4.5); this suite restates
+that for the hardened serving stack.  One seeded workload runs twice against
+a health-monitored two-replica cluster:
+
+- **clean** (``serving_chaos_clean_*``): no faults — the baseline rows,
+- **faulted** (``serving_chaos_faulted_*``): the same prompts driven through
+  a fixed :class:`~repro.serve.faults.FaultPlan` that crashes a replica,
+  dilates another's step times by the §4.5 throttle signature (straggler
+  failover), raises one simulated pallas kernel fault (graceful ``xla``
+  degradation), poisons one lane's logits with NaN (quarantine + retry),
+  and steals free KV pages (admission pressure).
+
+Both runs emit the full cluster row set — TTFT, latency, throughput, plus
+the robustness rows (``*_goodput``, ``*_availability``, ``*_faults``) whose
+clean-vs-faulted delta is the headline.  The driver *asserts* the chaos
+contract before reporting: zero lost sessions, and token-exact output for
+every non-deadline session against the clean run.  Fault injection is
+host-side flag flipping (no sleeps, no wall-clock coupling), so the faulted
+rows are as reproducible as the clean ones.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.registry import register
+
+from .serving import _build_model
+
+
+def _fault_plan():
+    """Fixed schedule exercising every fault kind (see module docstring).
+
+    Ticks are injector ticks: the crash lands while prompts are mid-decode,
+    the straggler window overlaps the crash outage (the skip-last-replica
+    guard keeps the cluster alive), and the NaN/kernel/page faults hit the
+    surviving replica once failover has concentrated load on it.
+    """
+    from repro.serve import Fault, FaultPlan
+
+    return FaultPlan(faults=(
+        Fault(tick=2, kind="crash", replica=0, duration=4),
+        # explicit factor: with 2 replicas the fleet median sits between the
+        # healthy and dilated step times, so the throttle-signature default
+        # (~1.35x) lands below its own threshold — 4x detects unambiguously
+        Fault(tick=3, kind="straggler", replica=1, duration=4, factor=4.0),
+        Fault(tick=8, kind="kernel_fault", replica=1),
+        Fault(tick=10, kind="nan_logits", replica=1, lanes=(0,), duration=1),
+        Fault(tick=11, kind="page_pressure", replica=1, pages=2, duration=3),
+    ))
+
+
+def _drive_chaos(cfg, model, params, *, backend, n_slots, prompt_len, out_len,
+                 requests, prefill_chunk, page_size, seed=0, plan=None):
+    """One measured cluster run over seeded prompts; ``plan`` switches the
+    measured batch from a plain ``run()`` to a fault-injected drive.  The
+    warm-up batch also ages each replica past the straggler warm-up gate so
+    the measured run's detector is armed.  Returns ``(cluster, sessions)``.
+    """
+    from repro.serve import (
+        ClusterConfig,
+        ClusterRouter,
+        EngineConfig,
+        FaultInjector,
+        HealthConfig,
+    )
+
+    cluster = ClusterRouter(model, params, ClusterConfig(
+        engine=EngineConfig(
+            n_slots=n_slots,
+            max_len=prompt_len + out_len + 1,
+            prefill_chunk=prefill_chunk,
+            page_size=page_size,
+            backend=backend,
+        ),
+        n_replicas=2,
+        router="round_robin",  # deterministic placement for the contrast
+        health=HealthConfig(heartbeat_timeout=2, min_samples=3,
+                            margin=0.25, cooldown=6, warmup_ticks=6),
+    ))
+    rng = np.random.default_rng(seed)
+
+    def submit_batch(n):
+        return [
+            cluster.submit(
+                [int(t) for t in rng.integers(1, cfg.vocab_size, prompt_len)],
+                max_new_tokens=out_len,
+            )
+            for _ in range(n)
+        ]
+
+    warm = submit_batch(min(2, requests))
+    cluster.run(max_ticks=50 * max(len(warm), 1) * out_len)
+    cluster.reset_metrics()
+    sessions = submit_batch(requests)
+    if plan is None:
+        cluster.run(max_ticks=50 * requests * out_len)
+    else:
+        FaultInjector(plan, cluster).run(max_ticks=50 * requests * out_len)
+    done = sum(s.done for s in sessions)
+    if done != requests:
+        raise RuntimeError(f"cluster served {done}/{requests} requests")
+    return cluster, sessions
+
+
+@register(
+    "serving_chaos",
+    backends=("pallas", "xla"),
+    paper_ref="§4.5 (same workload, clean vs throttled contrast)",
+    description="cluster goodput/availability under a fixed fault schedule vs clean",
+    quick={"n_slots": 2, "prompt_len": 8, "out_len": 8, "requests": 6,
+           "prefill_chunk": 4, "page_size": 4},
+    full={"n_slots": 2, "prompt_len": 8, "out_len": 12, "requests": 10,
+          "prefill_chunk": 4, "page_size": 4},
+)
+def bench_serving_chaos(n_slots=2, prompt_len=8, out_len=8, requests=6,
+                        prefill_chunk=4, page_size=4, seed=0,
+                        backend="xla") -> list:
+    """Clean and faulted runs over the same seeded workload; the faulted
+    run must lose nothing and stay token-exact (non-deadline sessions)
+    before its rows are reported."""
+    cfg, model, params = _build_model()
+    common = dict(backend=backend, n_slots=n_slots, prompt_len=prompt_len,
+                  out_len=out_len, requests=requests,
+                  prefill_chunk=prefill_chunk, page_size=page_size, seed=seed)
+    clean, clean_sessions = _drive_chaos(cfg, model, params, **common)
+    faulted, faulted_sessions = _drive_chaos(
+        cfg, model, params, plan=_fault_plan(), **common
+    )
+    # the chaos contract gates reporting: same prompts, same tokens
+    for ref, s in zip(clean_sessions, faulted_sessions):
+        if s.finish_reason == "deadline":
+            continue
+        if s.out != ref.out:
+            raise RuntimeError(
+                f"chaos run diverged from clean run on rid {s.rid}: "
+                f"{s.out} != {ref.out}"
+            )
+    recs = []
+    recs.extend(clean.to_records(
+        "serving_chaos", "serving_chaos_clean", x="clean"))
+    recs.extend(faulted.to_records(
+        "serving_chaos", "serving_chaos_faulted", x="faulted"))
+    return recs

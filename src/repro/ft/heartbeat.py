@@ -20,6 +20,11 @@ class HeartbeatMonitor:
     def beat(self, worker: str, step: int):
         self._last[worker] = (step, self.clock())
 
+    def forget(self, worker: str):
+        """Stop tracking ``worker`` (it was failed over or decommissioned) —
+        otherwise its stale beat keeps it in ``dead_workers()`` forever."""
+        self._last.pop(worker, None)
+
     def dead_workers(self) -> list[str]:
         now = self.clock()
         return sorted(

@@ -37,6 +37,12 @@ class StragglerDetector:
             self._signature = slowdown_factor(self.throttle, self.utilization)
         return self._signature
 
+    def forget(self, worker: str):
+        """Drop ``worker``'s samples (failed over / revived): a replica that
+        comes back healthy must not be re-flagged on its throttled history."""
+        self._ewma.pop(worker, None)
+        self._history.pop(worker, None)
+
     def observe(self, worker: str, step_time_s: float):
         prev = self._ewma.get(worker)
         self._ewma[worker] = (

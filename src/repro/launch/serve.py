@@ -14,6 +14,13 @@ force fake ones with XLA_FLAGS=--xla_force_host_platform_device_count=8):
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
         --requests 12 --replicas 2 --tp 2 --router least_loaded
+
+Chaos drill (see docs/robustness.md) — seeded fault schedule against a
+health-monitored cluster; deadlines bound per-request latency:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
+        --requests 12 --replicas 2 --health --chaos --chaos-seed 7 \
+        --deadline-s 30
 """
 from __future__ import annotations
 
@@ -25,13 +32,16 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import build_model
 from repro.serve import (
-    ROUTERS,
     SCHEDULERS,
     ClusterConfig,
     ClusterRouter,
     EngineConfig,
+    FaultInjector,
+    FaultPlan,
+    HealthConfig,
     ServeEngine,
     UnsupportedFamilyError,
+    make_router,
 )
 
 
@@ -66,9 +76,27 @@ def main(argv=None):
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel degree per replica (devices per "
                          "engine mesh; >1 selects the ClusterRouter path)")
-    ap.add_argument("--router", choices=sorted(ROUTERS), default="least_loaded",
-                    help="replica placement policy (cluster path only)")
+    ap.add_argument("--router", default="least_loaded",
+                    help="replica placement policy (cluster path only): any "
+                         "built-in or register_router()-registered name")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request deadline in seconds; expired requests "
+                         "finish with finish_reason='deadline'")
+    ap.add_argument("--health", action="store_true",
+                    help="enable health monitoring on the cluster path "
+                         "(heartbeat + straggler failover, circuit breaker)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="drive the run through a FaultInjector with a "
+                         "seeded random fault schedule")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed for FaultPlan.random (with --chaos)")
+    ap.add_argument("--chaos-faults", type=int, default=4,
+                    help="number of scheduled faults (with --chaos)")
     args = ap.parse_args(argv)
+    try:  # fail fast on a bad router name; the error lists registered names
+        make_router(args.router)
+    except ValueError as e:
+        raise SystemExit(str(e)) from None
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -96,7 +124,8 @@ def main(argv=None):
         if clustered:
             engine = ClusterRouter(model, params, ClusterConfig(
                 engine=engine_cfg, n_replicas=args.replicas, tp=args.tp,
-                router=args.router))
+                router=args.router,
+                health=HealthConfig() if args.health else None))
         else:
             engine = ServeEngine(model, params, engine_cfg)
     except UnsupportedFamilyError as e:
@@ -115,12 +144,21 @@ def main(argv=None):
                 prefix + list(rng.integers(1, cfg.vocab_size, args.prompt_len)),
                 args.max_new,
                 priority=i % 3,  # exercise the priority axis under --scheduler priority
+                deadline_s=args.deadline_s,
             )
             for i in range(args.requests)
         ]
     except UnsupportedFamilyError as e:  # cluster replicas build lazily here
         raise SystemExit(str(e)) from None
-    finished = engine.run()
+    injector = None
+    if args.chaos:
+        plan = FaultPlan.random(
+            args.chaos_seed, n_faults=args.chaos_faults,
+            n_replicas=args.replicas if clustered else 1)
+        injector = FaultInjector(plan, engine)
+        finished = injector.run()
+    else:
+        finished = engine.run()
     s = engine.summary()
     if clustered:
         per = s["per_replica"]
@@ -149,6 +187,25 @@ def main(argv=None):
             f"{s['prefix_tokens_reused']} prefix tokens reused "
             f"({s['prefix_hits']} hits)"
         )
+    if injector is not None:
+        inj = injector.summary()
+        applied = {k: v for k, v in inj["applied"].items() if v}
+        print(
+            f"chaos: {inj['plan_faults']} scheduled fault(s), "
+            f"applied {applied}, {inj['skipped']} skipped, "
+            f"{inj['crash_ticks']} crashed tick(s)"
+        )
+    if injector is not None or args.deadline_s is not None or args.health:
+        line = (
+            f"robustness: goodput {s['goodput_tok_s']:.1f} tok/s, "
+            f"{s['deadline_expired']} deadline-expired, "
+            f"{s['requeues']} requeues, {s['quarantines']} quarantines, "
+            f"{s['degradations']} degradations"
+        )
+        if clustered:
+            line += (f", availability {s['availability']:.0%}, "
+                     f"failovers {s['failovers']}")
+        print(line)
     for sess in finished[:4]:
         print(f"  req {sess.rid} [{sess.finish_reason}]: "
               f"{sess.out[:10]}{'...' if len(sess.out) > 10 else ''}")

@@ -13,27 +13,39 @@ batching, recompute preemption, and copy-on-write shared prefixes
 ``ClusterRouter`` + ``ClusterConfig`` scale the same surface out: optional
 tensor-parallel decode inside each engine (``EngineConfig.mesh`` /
 ``ClusterConfig.tp``) and a data-parallel replica router with pluggable
-placement policies, pooled ``ClusterMetrics``, and replica-failure
-drain/requeue — see docs/scaling.md.
+placement policies (extensible via ``register_router``), pooled
+``ClusterMetrics``, and replica-failure drain/requeue — see docs/scaling.md.
+
+Robustness (see docs/robustness.md): per-request deadlines
+(``submit(deadline_s=)``), a budgeted requeue path with exponential backoff
+(``RetryBudgetExceeded``), NaN-guard lane quarantine, graceful pallas->xla
+degradation, health-driven failover with a circuit breaker
+(``ClusterConfig.health`` / ``HealthConfig``), and the deterministic chaos
+layer in ``repro.serve.faults`` (``FaultPlan`` / ``FaultInjector``).
 """
 from .cluster import (
     ROUTERS,
     ClusterConfig,
     ClusterRouter,
+    HealthConfig,
     LeastLoadedPolicy,
     PrefixAffinityPolicy,
     Replica,
     RoundRobinPolicy,
     RouterPolicy,
     make_router,
+    register_router,
     replica_meshes,
 )
 from .engine import (
     SERVABLE_FAMILIES,
     EngineConfig,
+    ReplicaCrashed,
+    RetryBudgetExceeded,
     ServeEngine,
     UnsupportedFamilyError,
 )
+from .faults import Fault, FaultInjector, FaultPlan
 from .metrics import ClusterMetrics, EngineMetrics
 from .paging import PageAllocator, PagePoolExhausted, SharedPrefix
 from .sampler import greedy, temperature_sample, top_k_sample
@@ -57,13 +69,19 @@ __all__ = [
     "EngineConfig",
     "EngineMetrics",
     "FCFSScheduler",
+    "Fault",
+    "FaultInjector",
+    "FaultPlan",
+    "HealthConfig",
     "LeastLoadedPolicy",
     "PageAllocator",
     "PagePoolExhausted",
     "PrefixAffinityPolicy",
     "PriorityScheduler",
     "Replica",
+    "ReplicaCrashed",
     "RequestStats",
+    "RetryBudgetExceeded",
     "RoundRobinPolicy",
     "RouterPolicy",
     "Scheduler",
@@ -75,6 +93,7 @@ __all__ = [
     "greedy",
     "make_router",
     "make_scheduler",
+    "register_router",
     "replica_meshes",
     "temperature_sample",
     "top_k_sample",

@@ -27,10 +27,21 @@ Replicas are built lazily on first use, so a model family the engine cannot
 serve surfaces its typed :class:`~repro.serve.engine.UnsupportedFamilyError`
 at ``submit()`` time — the first call a caller actually makes — rather than
 at router construction.
+
+Health-driven failover (see ``docs/robustness.md``): with
+``ClusterConfig.health`` set, every cluster tick beats per-replica
+heartbeats into :class:`repro.ft.HeartbeatMonitor` (clocked in *ticks*, not
+seconds, so detection is deterministic) and feeds per-replica step times to
+:class:`repro.ft.StragglerDetector` (the paper's §4.5 throttle signature);
+a replica that stops beating — e.g. its engine raised
+:class:`~repro.serve.engine.ReplicaCrashed` — or drifts into the throttle
+signature is failed over automatically, and a circuit breaker half-opens it
+back in after an exponentially-growing cool-down.
 """
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, replace
 from typing import Optional, Protocol, Sequence, runtime_checkable
 
@@ -38,9 +49,11 @@ import jax
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.core.throttle import V5E_THROTTLE, ThrottleParams
+from repro.ft import HeartbeatMonitor, StragglerDetector
 from repro.models.api import ModelApi
 
-from .engine import EngineConfig, ServeEngine
+from .engine import EngineConfig, ReplicaCrashed, ServeEngine
 from .metrics import ClusterMetrics
 from .paging import SharedPrefix
 from .session import Session
@@ -81,6 +94,13 @@ def replica_meshes(n_replicas: int, tp: int = 1, devices=None) -> list:
 # ---------------------------------------------------------------------------
 # replicas
 # ---------------------------------------------------------------------------
+# circuit-breaker states (per replica): CLOSED serves normally, OPEN is
+# failed and unroutable, HALF_OPEN is probing its way back in after cool-down
+BREAKER_CLOSED = "closed"
+BREAKER_OPEN = "open"
+BREAKER_HALF_OPEN = "half_open"
+
+
 @dataclass
 class Replica:
     """One data-parallel member: an engine pinned to a device subset."""
@@ -89,6 +109,13 @@ class Replica:
     engine: ServeEngine
     mesh: Optional[Mesh] = None
     alive: bool = True
+    # circuit-breaker bookkeeping (driven by ClusterRouter when health
+    # monitoring is on; a manual fail_replica still opens the breaker)
+    breaker: str = BREAKER_CLOSED
+    failed_at: int = -1  # cluster tick of the most recent failure
+    fail_count: int = 0  # lifetime failures (doubles the cool-down)
+    probe_ok: int = 0  # consecutive healthy half-open ticks
+    work_ticks: int = 0  # successful steps with work (straggler warm-up gate)
 
     def load(self) -> int:
         """Routing load: occupied slots plus queued sessions."""
@@ -97,6 +124,11 @@ class Replica:
 
     def has_work(self) -> bool:
         return self.alive and self.engine.has_work()
+
+    @property
+    def name(self) -> str:
+        """Worker id in the heartbeat/straggler monitors."""
+        return f"r{self.index}"
 
 
 # ---------------------------------------------------------------------------
@@ -185,6 +217,34 @@ ROUTERS = {
 }
 
 
+def register_router(name: str, policy: Optional[type] = None):
+    """Register a :class:`RouterPolicy` factory under ``name``.
+
+    Registered policies become reachable everywhere stock ones are — by
+    name in :class:`ClusterConfig`, :func:`make_router`, and the
+    ``launch/serve.py --router`` flag.  Usable directly or as a decorator::
+
+        @register_router("sticky")
+        class StickyPolicy: ...
+
+        register_router("sticky2", StickyPolicy)
+
+    ``name`` must be new (re-registering raises, so stock policies cannot be
+    shadowed silently); the factory is called with no arguments.
+    """
+
+    def _register(cls):
+        if name in ROUTERS:
+            raise ValueError(
+                f"router {name!r} already registered ({ROUTERS[name].__name__}); "
+                "pick a new name"
+            )
+        ROUTERS[name] = cls
+        return cls
+
+    return _register if policy is None else _register(policy)
+
+
 def make_router(name: str) -> RouterPolicy:
     try:
         return ROUTERS[name]()
@@ -202,13 +262,65 @@ _RID_STRIDE = 10**6
 
 
 @dataclass(frozen=True)
+class HealthConfig:
+    """Knobs for health-driven failover (``ClusterConfig.health``).
+
+    All horizons are in **cluster ticks** — the monitors run on the router's
+    tick clock, so detection points are deterministic and fault schedules
+    replay exactly (wall-clock enters only through the straggler detector's
+    step-time ratios).
+
+    - ``heartbeat_timeout`` — ticks without a beat before a replica is
+      declared dead and failed over (a crashed engine stops beating).
+    - ``straggler`` — enable throttle-signature straggler failover;
+      ``throttle``/``utilization``/``margin``/``min_samples`` parameterize
+      the :class:`repro.ft.StragglerDetector` (§4.5 slowdown signature).
+    - ``cooldown`` — ticks a failed replica's breaker stays OPEN before the
+      first half-open probe; doubles per repeat failure (capped at
+      ``2**max_cooldown_doublings``).
+    - ``probe_ticks`` — consecutive healthy HALF_OPEN ticks before the
+      breaker fully closes again.
+    - ``warmup_ticks`` — per-replica working steps to skip before feeding
+      the straggler detector: the first few ticks carry jit-compile spikes
+      that would otherwise read as a throttle signature.
+    """
+
+    heartbeat_timeout: int = 3
+    straggler: bool = True
+    throttle: ThrottleParams = V5E_THROTTLE
+    utilization: float = 0.9
+    margin: float = 0.25
+    min_samples: int = 5
+    cooldown: int = 8
+    probe_ticks: int = 2
+    max_cooldown_doublings: int = 4
+    warmup_ticks: int = 5
+
+    def __post_init__(self):
+        if self.heartbeat_timeout < 1:
+            raise ValueError("heartbeat_timeout must be >= 1 tick")
+        if self.cooldown < 1:
+            raise ValueError("cooldown must be >= 1 tick")
+        if self.probe_ticks < 1:
+            raise ValueError("probe_ticks must be >= 1")
+        if not 0.0 <= self.margin <= 1.0:
+            raise ValueError("margin must be in [0, 1]")
+        if self.warmup_ticks < 0:
+            raise ValueError("warmup_ticks must be >= 0")
+
+
+@dataclass(frozen=True)
 class ClusterConfig:
     """Cluster-level knobs wrapped around one :class:`EngineConfig`.
 
     ``engine`` is the per-replica template — its ``mesh`` must be unset
     (the cluster owns device placement: each replica gets a ``tp``-device
     ``model``-axis mesh from :func:`replica_meshes`).  ``devices`` limits
-    the device pool (default: all of ``jax.devices()``).
+    the device pool (default: all of ``jax.devices()``).  ``health`` turns
+    on heartbeat/straggler monitoring with automatic failover and the
+    circuit breaker (default off: detection thresholds are workload-relative
+    and first-tick compile spikes would need the warm-up pass the bench
+    drivers do — opt in per deployment, see docs/robustness.md).
     """
 
     engine: EngineConfig
@@ -216,6 +328,7 @@ class ClusterConfig:
     tp: int = 1  # tensor-parallel degree inside each replica
     router: str = "least_loaded"  # policy name used when none is injected
     devices: Optional[tuple] = None  # device pool (None: jax.devices())
+    health: Optional[HealthConfig] = None  # None: manual fail_replica only
 
     def __post_init__(self):
         if self.n_replicas < 1:
@@ -262,6 +375,18 @@ class ClusterRouter:
         self.replicas: list = []  # built lazily by _ensure_replicas
         self.metrics = ClusterMetrics()
         self._placement: dict = {}  # session rid -> replica index
+        # health monitoring runs on the router's tick clock — deterministic
+        # detection horizons regardless of wall-clock jitter
+        self._tick = 0
+        h = config.health
+        self.monitor = HeartbeatMonitor(
+            timeout_s=float(h.heartbeat_timeout if h else 0),
+            clock=lambda: float(self._tick),
+        ) if h else None
+        self.detector = StragglerDetector(
+            throttle=h.throttle, utilization=h.utilization,
+            margin=h.margin, min_samples=h.min_samples,
+        ) if h and h.straggler else None
 
     # -- lifecycle ---------------------------------------------------------
     def _ensure_replicas(self) -> None:
@@ -277,6 +402,10 @@ class ClusterRouter:
             )
             engine._rid = i * _RID_STRIDE  # cluster-unique session rids
             self.replicas.append(Replica(index=i, engine=engine, mesh=mesh))
+            if self.monitor is not None:
+                # seed a beat so a replica that crashes before its first
+                # successful step still ages into dead_workers()
+                self.monitor.beat(f"r{i}", self._tick)
 
     def _live(self) -> list:
         live = [r for r in self.replicas if r.alive]
@@ -288,7 +417,7 @@ class ClusterRouter:
 
     # -- the engine-shaped surface -----------------------------------------
     def submit(self, prompt, max_new_tokens: int, *, priority: int = 0,
-               on_token=None) -> Session:
+               on_token=None, deadline_s: Optional[float] = None) -> Session:
         """Route a request to a replica; returns its :class:`Session`."""
         self._ensure_replicas()  # UnsupportedFamilyError surfaces here
         self._live()
@@ -296,7 +425,8 @@ class ClusterRouter:
         if not self.replicas[idx].alive:
             raise RuntimeError(f"policy placed request on dead replica {idx}")
         session = self.replicas[idx].engine.submit(
-            prompt, max_new_tokens, priority=priority, on_token=on_token
+            prompt, max_new_tokens, priority=priority, on_token=on_token,
+            deadline_s=deadline_s,
         )
         self._placement[session.rid] = idx
         self.metrics.record_route()
@@ -322,11 +452,103 @@ class ClusterRouter:
         return prefix
 
     def step(self) -> None:
-        """One cluster tick: every live replica with work advances one step."""
+        """One cluster tick: every live replica with work advances one step.
+
+        With health monitoring on, this is also the detection loop: replicas
+        that step successfully beat the heartbeat monitor and feed the
+        straggler detector their (scale-dilated) step times; a replica whose
+        engine raises :class:`ReplicaCrashed` misses its beat and is failed
+        over once the heartbeat horizon passes; OPEN breakers cool down
+        toward HALF_OPEN, and healthy HALF_OPEN probes re-close.  Without
+        health monitoring a crashed engine's error propagates (the manual,
+        pre-health behavior).
+        """
         self._ensure_replicas()
+        h = self.cfg.health
+        if h:
+            self._breaker_tick(h)
         for r in self.replicas:
-            if r.has_work():
-                r.engine.step()
+            if not r.alive:
+                continue
+            try:
+                if r.engine.crashed:
+                    # surface without mutating engine state (step() would
+                    # raise the same before doing any work)
+                    raise ReplicaCrashed(
+                        f"replica {r.index} crashed at cluster tick {self._tick}"
+                    )
+                if r.has_work():
+                    r.engine.step()
+                    r.work_ticks += 1
+                    # skip the replica's first few working steps: jit-compile
+                    # spikes there would read as a throttle signature
+                    if (self.detector is not None
+                            and r.work_ticks > h.warmup_ticks):
+                        self.detector.observe(r.name, r.engine.last_step_s)
+            except ReplicaCrashed:
+                if h is None:
+                    raise
+                # no beat this tick: the heartbeat horizon drives failover
+                if r.breaker == BREAKER_HALF_OPEN:
+                    self._auto_fail(r.index, "probe")
+                continue
+            if h:
+                self.monitor.beat(r.name, self._tick)
+                if r.breaker == BREAKER_HALF_OPEN:
+                    r.probe_ok += 1
+                    if r.probe_ok >= h.probe_ticks:
+                        r.breaker = BREAKER_CLOSED
+                        self.metrics.record_revival()
+        if h:
+            self._health_failover(h)
+            self.metrics.record_liveness(
+                sum(r.alive for r in self.replicas), len(self.replicas)
+            )
+        self._tick += 1
+
+    # -- health-driven failover (docs/robustness.md) -----------------------
+    def _breaker_tick(self, h: HealthConfig) -> None:
+        """OPEN -> HALF_OPEN once a failed replica's cool-down has elapsed."""
+        for r in self.replicas:
+            if r.alive or r.breaker != BREAKER_OPEN:
+                continue
+            cooldown = h.cooldown * 2 ** min(
+                max(r.fail_count - 1, 0), h.max_cooldown_doublings
+            )
+            if self._tick - r.failed_at < cooldown:
+                continue
+            r.alive = True
+            r.breaker = BREAKER_HALF_OPEN
+            r.probe_ok = 0
+            self.metrics.record_half_open()
+            self.monitor.beat(r.name, self._tick)  # not instantly dead again
+            # the revived engine still holds its registered prefixes — re-teach
+            # prefix-affinity policies the placement forget_replica() dropped
+            note = getattr(self.policy, "note_prefix", None)
+            if note is not None:
+                for tokens in getattr(r.engine, "_prefixes", {}):
+                    note(tokens, r.index)
+
+    def _health_failover(self, h: HealthConfig) -> None:
+        """Fail over replicas the monitors flag (dead beats, stragglers)."""
+        for name in self.monitor.dead_workers():
+            idx = int(name[1:])
+            if self.replicas[idx].alive:
+                self._auto_fail(idx, "heartbeat")
+        if self.detector is not None:
+            for name, _inflation in self.detector.stragglers():
+                idx = int(name[1:])
+                if self.replicas[idx].alive:
+                    self._auto_fail(idx, "straggler")
+
+    def _auto_fail(self, index: int, reason: str) -> None:
+        """Detected-failure response; skips (and counts) when ``index`` is
+        the last live replica — killing it would lose the cluster."""
+        live = [r for r in self.replicas if r.alive]
+        if len(live) <= 1:
+            self.metrics.record_failover_skipped()
+            return
+        self.fail_replica(index, reason=reason)
 
     def has_work(self) -> bool:
         return any(r.has_work() for r in self.replicas)
@@ -334,7 +556,9 @@ class ClusterRouter:
     def run(self, max_ticks: int = 10_000) -> list:
         """Drive until every replica drains (or ``max_ticks``); returns the
         cluster-wide finished list.  Router wall-clock accumulates into
-        ``ClusterMetrics.wall_s`` — the throughput denominator."""
+        ``ClusterMetrics.wall_s`` — the throughput denominator.  Exhausting
+        the tick budget with work pending warns and bumps the
+        ``tick_budget_exhausted`` counter (mirrors ``ServeEngine.run``)."""
         self._ensure_replicas()
         t0 = time.perf_counter()
         ticks = 0
@@ -342,6 +566,15 @@ class ClusterRouter:
             self.step()
             ticks += 1
         self.metrics.wall_s += time.perf_counter() - t0
+        if self.has_work():
+            self.metrics.record_tick_budget_exhausted()
+            warnings.warn(
+                f"cluster run(max_ticks={max_ticks}) stopped with work still "
+                f"pending on {sum(r.has_work() for r in self.replicas)} "
+                "replica(s)",
+                RuntimeWarning,
+                stacklevel=2,
+            )
         return self.finished
 
     @property
@@ -349,23 +582,36 @@ class ClusterRouter:
         return [s for r in self.replicas for s in r.engine.finished]
 
     # -- failure path ------------------------------------------------------
-    def fail_replica(self, index: int) -> list:
-        """Simulate losing replica ``index``: drain it and requeue its live
-        sessions onto the survivors.
+    def fail_replica(self, index: int, *, reason: str = "manual") -> list:
+        """Take replica ``index`` out (manually or via health detection):
+        drain it and requeue its live sessions onto the survivors.
 
         Every in-flight and queued session comes off the failed engine with
         its generated output intact; re-admission on the target replica
         replays prompt+output through prefill, so streams resume token-exact
         (each session keeps its ``Session`` handle — callers notice nothing
-        but latency).  Returns the requeued sessions.
+        but latency).  Requeues run through the target engine's budgeted
+        :meth:`~repro.serve.engine.ServeEngine.requeue` (a session bounced
+        too often raises the typed ``RetryBudgetExceeded``).  The replica's
+        circuit breaker opens; with health monitoring on it will half-open
+        back in after the cool-down.  ``reason`` tags the failover counter
+        (``manual`` / ``heartbeat`` / ``straggler`` / ``probe``).  Returns
+        the requeued sessions.
         """
         self._ensure_replicas()
         failed = self.replicas[index]
         if not failed.alive:
             raise ValueError(f"replica {index} already failed")
         failed.alive = False
+        failed.breaker = BREAKER_OPEN
+        failed.failed_at = self._tick
+        failed.fail_count += 1
+        if self.monitor is not None:
+            self.monitor.forget(failed.name)
+        if self.detector is not None:
+            self.detector.forget(failed.name)
         drained = failed.engine.drain()
-        self.metrics.record_failure(drained)
+        self.metrics.record_failure(drained, reason=reason)
         forget = getattr(self.policy, "forget_replica", None)
         if forget is not None:
             forget(index)
@@ -373,10 +619,9 @@ class ClusterRouter:
         for session in drained:
             idx = self.policy.place(session.prompt, session.priority, self.replicas)
             target = self.replicas[idx].engine
-            # scheduler-level resubmit keeps the Session object (and its
-            # partial output) alive — engine.submit would mint a new one
-            session._on_queued_cancel = target._record_queued_cancel
-            target.scheduler.submit(session)
+            # requeue (not engine.submit) keeps the Session object and its
+            # partial output alive, and charges the session's retry budget
+            target.requeue(session)
             self._placement[session.rid] = idx
         return drained
 
@@ -390,7 +635,8 @@ class ClusterRouter:
         out = self.metrics.summary(self._parts())
         out["tp"] = self.cfg.tp
         out["per_replica"] = [
-            {"replica": r.index, "alive": r.alive, **r.engine.summary()}
+            {"replica": r.index, "alive": r.alive, "breaker": r.breaker,
+             **r.engine.summary()}
             for r in self.replicas
         ]
         return out

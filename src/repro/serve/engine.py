@@ -36,10 +36,22 @@ Correctness invariants the paged path maintains:
   first write (CoW at page granularity),
 - empty/finished lanes carry the pad position sentinel (``T*page``), which
   writes nothing — a pad lane can never scribble on a live lane's pages.
+
+Robustness (see ``docs/robustness.md``): ``submit(deadline_s=)`` bounds a
+request's wall-clock (it finishes with ``finish_reason="deadline"`` and
+partial output), every re-queue of drained/preempted/quarantined work goes
+through the budgeted :meth:`ServeEngine.requeue` (exponential backoff, typed
+:class:`RetryBudgetExceeded`), non-finite logits quarantine the lane and
+retry the session (token-exact: the poisoned token is never recorded), and a
+compiled-step failure on the pallas path falls back once to the ``xla``
+backend (``EngineConfig.degrade``).  The ``crashed`` / ``step_time_scale``
+attributes are the deterministic fault-injection surface of
+``repro.serve.faults``.
 """
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass
 from typing import Callable, Optional
 
@@ -58,6 +70,7 @@ from .scheduler import Scheduler, make_scheduler
 from .session import (
     ACTIVE,
     FINISH_CANCELLED,
+    FINISH_DEADLINE,
     FINISH_EOS,
     FINISH_MAX_LEN,
     FINISH_MAX_NEW_TOKENS,
@@ -92,6 +105,36 @@ class UnsupportedFamilyError(NotImplementedError):
             "state cannot yet advance independently inside a shared batch; "
             f"serve one of the dense-cache families {SERVABLE_FAMILIES} "
             "instead (see the ROADMAP per-lane state isolation item)"
+        )
+
+
+class ReplicaCrashed(RuntimeError):
+    """The engine's (simulated) process is down: ``step()`` refuses to run.
+
+    Raised at the very top of :meth:`ServeEngine.step` while the ``crashed``
+    flag is set — before any host bookkeeping mutates, so the engine's state
+    stays consistent and a later revival (circuit-breaker half-open) resumes
+    cleanly.  A :class:`~repro.serve.cluster.ClusterRouter` with health
+    monitoring enabled catches this per replica and lets the heartbeat
+    timeout drive failover; without health monitoring it propagates.
+    """
+
+
+class RetryBudgetExceeded(RuntimeError):
+    """A session was re-queued more times than ``EngineConfig.retry_budget``.
+
+    Raised from :meth:`ServeEngine.requeue` instead of silently looping a
+    session through drain/preempt/quarantine forever.  ``session`` is the
+    offending request (its partial output is intact).
+    """
+
+    def __init__(self, session: Session, budget: int):
+        self.session = session
+        self.budget = budget
+        super().__init__(
+            f"session {session.rid} re-queued {session.stats.requeues} times, "
+            f"over retry_budget={budget}; partial output "
+            f"({len(session.out)} tokens) is intact on the session handle"
         )
 
 
@@ -133,6 +176,18 @@ class EngineConfig:
     - ``sampler`` — logits -> token function (greedy default).
     - ``scheduler`` — stock admission policy name used when no
       :class:`Scheduler` instance is injected.
+    - ``retry_budget`` / ``retry_backoff`` — bounds on the requeue loop for
+      drained/preempted/quarantined sessions: over-budget requeues raise the
+      typed :class:`RetryBudgetExceeded`; a nonzero backoff delays the n-th
+      re-admission by ``retry_backoff * 2**(n-1)`` engine ticks (0 keeps the
+      immediate-retry semantics).
+    - ``quarantine_ticks`` — ticks a lane stays out of admission after its
+      logits failed the NaN/Inf guard.
+    - ``nan_guard`` — check sampled logits rows for non-finite values and
+      quarantine + retry instead of emitting garbage tokens.
+    - ``degrade`` — on a compiled-step failure under a pallas-like backend,
+      fall back once to the ``xla`` backend (token-identical) instead of
+      failing the whole engine; a second failure re-raises.
     """
 
     n_slots: int
@@ -148,8 +203,19 @@ class EngineConfig:
     eos_id: Optional[int] = None
     sampler: Callable = greedy
     scheduler: str = "fcfs"  # default policy when none is injected
+    retry_budget: int = 64  # max requeues per session before the typed error
+    retry_backoff: int = 0  # base backoff in ticks (0: immediate re-admission)
+    quarantine_ticks: int = 4  # lane bench time after a NaN-guard trip
+    nan_guard: bool = True  # quarantine lanes with non-finite logits
+    degrade: bool = True  # pallas step failure -> one-shot xla fallback
 
     def __post_init__(self):
+        if self.retry_budget < 1:
+            raise ValueError("retry_budget must be >= 1")
+        if self.retry_backoff < 0:
+            raise ValueError("retry_backoff must be >= 0 ticks")
+        if self.quarantine_ticks < 0:
+            raise ValueError("quarantine_ticks must be >= 0")
         if self.n_slots < 1:
             raise ValueError("n_slots must be >= 1")
         if self.max_len < 2:
@@ -224,6 +290,17 @@ class ServeEngine:
         self.last_token = jnp.zeros((config.n_slots,), jnp.int32)
         self._lane_pos = [0] * config.n_slots  # host mirror: next cache index
         self._rid = 0
+        # -- robustness state (docs/robustness.md) -------------------------
+        self.tick = 0  # monotonically increasing step counter
+        self.last_step_s = 0.0  # scaled duration of the most recent step()
+        # fault-injection surface (repro.serve.faults flips these):
+        self.crashed = False  # step() raises ReplicaCrashed while set
+        self.step_time_scale = 1.0  # virtual dilation of reported step times
+        self._inject_step_error: Optional[Exception] = None  # raised pre-decode
+        self._inject_nan_lanes: set = set()  # lanes whose logits are poisoned
+        # hardening state:
+        self._degraded = False  # compiled steps fell back to the xla backend
+        self._quarantined: dict = {}  # lane -> first tick it is usable again
         if self.paged:
             ps = config.page_size
             self._table_width = config.table_width
@@ -265,17 +342,22 @@ class ServeEngine:
             return cache
         return jax.device_put(cache, shardings_fn(cache, self.mesh))
 
-    def _jit_scoped(self, fn: Callable) -> Callable:
+    def _jit_scoped(self, fn: Callable, backend: Optional[str] = None) -> Callable:
         """jit ``fn`` so it traces under the config's kernel policy and mesh.
 
         With a policy or mesh set, jit a per-engine closure (not ``fn``
         itself): jax's trace cache is keyed on function identity, not on the
         policy contextvar or the activation-sharding mesh, so jitting the
         shared ``model.decode_*`` directly would let a second engine with a
-        different backend/mesh silently reuse the first engine's trace."""
-        if self.cfg.backend is None and self.cfg.autotune is None and self.mesh is None:
+        different backend/mesh silently reuse the first engine's trace.
+
+        ``backend`` overrides the config's backend — the graceful-degradation
+        path re-jits the steps with ``backend="xla"`` after a pallas failure.
+        """
+        backend = self.cfg.backend if backend is None else backend
+        if backend is None and self.cfg.autotune is None and self.mesh is None:
             return jax.jit(fn)
-        backend, autotune, mesh = self.cfg.backend, self.cfg.autotune, self.mesh
+        autotune, mesh = self.cfg.autotune, self.mesh
 
         def scoped(*args):  # fresh object per engine -> own trace cache
             with kernel_policy(backend=backend, autotune=autotune):
@@ -287,9 +369,64 @@ class ServeEngine:
         return jax.jit(scoped)
 
     # ------------------------------------------------------------------
+    # graceful degradation (docs/robustness.md)
+    # ------------------------------------------------------------------
+    def _backend(self) -> str:
+        """Effective kernel backend of the compiled steps right now."""
+        if self._degraded:
+            return "xla"
+        return self.cfg.backend if self.cfg.backend is not None else "pallas"
+
+    def _degrade(self, err: Exception) -> None:
+        """One-shot fallback: re-jit decode/prefill on the ``xla`` backend.
+
+        Backend parity (the kernels' correctness contract) makes the
+        degraded engine token-identical — only kernel dispatch changes, so
+        in-flight lanes continue from the same cache without replay."""
+        self._degraded = True
+        self.metrics.record_degradation()
+        if self.paged:
+            self._decode = self._jit_scoped(self.model.decode_step_paged, backend="xla")
+            self._chunk = self._jit_scoped(self.model.decode_chunk_paged, backend="xla")
+        else:
+            self._decode = self._jit_scoped(self.model.decode_step, backend="xla")
+            self._chunk = self._jit_scoped(self.model.decode_chunk, backend="xla")
+        warnings.warn(
+            f"serving engine degraded to the xla backend after a compiled-step "
+            f"failure: {err!r}",
+            RuntimeWarning,
+            stacklevel=4,
+        )
+
+    def _call_compiled(self, which: str, *args):
+        """Run a compiled step with the degradation guard around it.
+
+        A failure under a pallas-like backend triggers :meth:`_degrade` and
+        retries the same arguments once through the xla-traced step; a
+        failure while already on xla (or with ``degrade=False``) re-raises.
+        """
+        while True:
+            fn = self._decode if which == "decode" else self._chunk
+            try:
+                if self._inject_step_error is not None and self._backend() != "xla":
+                    raise self._inject_step_error
+                return fn(*args)
+            except Exception as err:  # degradation boundary: any step failure
+                if not self.cfg.degrade or self._backend() == "xla":
+                    raise
+                self._degrade(err)
+
+    # ------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int, *, priority: int = 0,
-               on_token: Optional[Callable] = None) -> Session:
-        """Queue a request; returns its streaming :class:`Session` handle."""
+               on_token: Optional[Callable] = None,
+               deadline_s: Optional[float] = None) -> Session:
+        """Queue a request; returns its streaming :class:`Session` handle.
+
+        ``deadline_s`` bounds the request's wall-clock from this call: a
+        session that is still queued or generating when the deadline passes
+        finishes with ``finish_reason="deadline"`` and whatever output it
+        has (the goodput metrics exclude its tokens).
+        """
         prompt = [int(t) for t in prompt]
         if not prompt:
             raise ValueError("empty prompt")
@@ -300,13 +437,39 @@ class ServeEngine:
             )
         if max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError("deadline_s must be positive (or None)")
         session = Session(self._rid, prompt, max_new_tokens,
-                          priority=priority, on_token=on_token)
+                          priority=priority, on_token=on_token,
+                          deadline_s=deadline_s)
         session.stats.submitted_at = time.perf_counter()
         session._on_queued_cancel = self._record_queued_cancel
         self._rid += 1
         self.scheduler.submit(session)
         return session
+
+    def requeue(self, session: Session) -> None:
+        """Budgeted re-queue for drained / preempted / quarantined sessions.
+
+        Every path that puts previously-admitted work back in the queue goes
+        through here: recompute preemption, :meth:`drain` (via the cluster's
+        failover), and NaN-guard quarantine.  The n-th requeue beyond
+        ``retry_budget`` raises :class:`RetryBudgetExceeded`; with
+        ``retry_backoff > 0`` re-admission is delayed exponentially
+        (``backoff * 2**(n-1)`` ticks, capped at 64x).  Paged pool-misfit
+        waits in admission deliberately do **not** count — they recur every
+        tick for a merely-waiting request and carry no failure signal.
+        """
+        session.stats.requeues += 1
+        self.metrics.record_requeue()
+        if session.stats.requeues > self.cfg.retry_budget:
+            raise RetryBudgetExceeded(session, self.cfg.retry_budget)
+        if self.cfg.retry_backoff:
+            wait = self.cfg.retry_backoff * 2 ** min(session.stats.requeues - 1, 6)
+            session._backoff_until = self.tick + wait
+        session.status = QUEUED
+        session._on_queued_cancel = self._record_queued_cancel
+        self.scheduler.submit(session)
 
     def _record_queued_cancel(self, session: Session) -> None:
         """Queued-cancel accounting: the session never occupies a slot, but
@@ -459,10 +622,9 @@ class ServeEngine:
         the stream resumes with no lost or corrupted tokens."""
         session = self.slots[lane]
         self._release_lane(lane)
-        session.status = QUEUED
         session.stats.preemptions += 1
         self.metrics.record_preemption()
-        self.scheduler.submit(session)
+        self.requeue(session)
 
     def _grow_lane(self, lane: int) -> bool:
         """Ensure the lane owns the page its next KV write lands in,
@@ -502,16 +664,46 @@ class ServeEngine:
             if s is not None and s.cancel_requested:
                 self._finalize(i, s, FINISH_CANCELLED)
 
+    def _expire_deadlines(self) -> None:
+        """Finish in-flight sessions whose wall-clock deadline passed (their
+        partial output stays on the handle)."""
+        now = time.perf_counter()
+        for i, s in enumerate(self.slots):
+            if s is not None and s.deadline_expired(now):
+                self._finalize(i, s, FINISH_DEADLINE)
+
+    def _quarantine_lane(self, lane: int, session: Session) -> None:
+        """NaN-guard response: bench the lane, retry the session elsewhere.
+
+        The poisoned tick's token is never recorded, so the retried session
+        replays prompt+output through prefill and resumes token-exact.  The
+        lane's pages return to the pool immediately (every KV position is
+        rewritten before it is read on re-admission, so a poisoned write
+        cannot leak), but the lane itself sits out ``quarantine_ticks``.
+        """
+        self._release_lane(lane)
+        self._quarantined[lane] = self.tick + self.cfg.quarantine_ticks
+        self.metrics.record_nan_event()
+        self.metrics.record_quarantine()
+        self.requeue(session)
+
     def _admit(self) -> list:
-        """Claim free slots for scheduler-selected sessions.
+        """Claim free non-quarantined slots for scheduler-selected sessions.
 
         In paged mode admission is additionally page-aware: a selected
         session that does not fit in the pool right now is re-queued via
         ``scheduler.submit`` (for the stock policies this re-appends it, so
         strict arrival order is traded for progress of smaller requests —
-        see docs/serving.md#admission).
+        see docs/serving.md#admission; such waits do not touch the retry
+        budget).  Selected sessions that were cancelled while queued finish
+        as ``cancelled``, ones whose deadline already passed finish as
+        ``deadline``, and ones still inside their requeue backoff window go
+        back to the queue untouched.
         """
-        free = [i for i, s in enumerate(self.slots) if s is None]
+        free = [
+            i for i, s in enumerate(self.slots)
+            if s is None and self._quarantined.get(i, 0) <= self.tick
+        ]
         if not free:
             return []
         picked = self.scheduler.select(len(free), self.cfg.n_slots)
@@ -522,6 +714,22 @@ class ServeEngine:
         now = time.perf_counter()
         assignments = []
         for session in picked:
+            if session.done:  # e.g. cancelled-in-queue under a custom policy
+                continue
+            if session.cancel_requested:
+                session._finish(FINISH_CANCELLED)
+                self._record_queued_cancel(session)
+                continue
+            if session.deadline_expired(now):
+                # expires without ever occupying a lane — same accounting
+                # as a queued cancel, but reason="deadline"
+                session._finish(FINISH_DEADLINE, now=now)
+                self.metrics.record_finished(session)
+                self.finished.append(session)
+                continue
+            if session._backoff_until > self.tick:
+                self.scheduler.submit(session)  # backoff: not eligible yet
+                continue
             lane = free[0]
             if self.paged:
                 plan = self._try_admit_paged(lane, session)
@@ -563,8 +771,8 @@ class ServeEngine:
         bt_args = (jnp.asarray(self._bt),) if self.paged else ()
         for c in range(n_chunks):
             sl = slice(c * chunk, (c + 1) * chunk)
-            logits, self.cache = self._chunk(
-                self.params, self.cache, *bt_args,
+            logits, self.cache = self._call_compiled(
+                "chunk", self.params, self.cache, *bt_args,
                 jnp.asarray(toks[:, sl]), jnp.asarray(poss[:, sl]),
             )
             ending = [
@@ -573,6 +781,9 @@ class ServeEngine:
             ]
             for lane, s, feed in ending:
                 row = logits[lane, spans[lane] - 1 - c * chunk]
+                if self.cfg.nan_guard and not bool(jnp.all(jnp.isfinite(row))):
+                    self._quarantine_lane(lane, s)  # retry the session whole
+                    continue
                 tok = int(self.cfg.sampler(row))
                 s.status = ACTIVE
                 self.last_token = self.last_token.at[lane].set(tok)
@@ -583,14 +794,32 @@ class ServeEngine:
                 if reason:
                     self._finalize(lane, s, reason)
         self.metrics.record_prefill(
-            time.perf_counter() - t0, sum(spans.values()), len(assignments)
+            (time.perf_counter() - t0) * self.step_time_scale,
+            sum(spans.values()), len(assignments),
         )
 
     # ------------------------------------------------------------------
     def step(self) -> None:
-        """One engine tick: release cancellations, admit + prefill, grow
-        pages (preempting if the pool is dry), decode."""
+        """One engine tick: release cancellations, expire deadlines, admit +
+        prefill, grow pages (preempting if the pool is dry), decode.
+
+        Raises :class:`ReplicaCrashed` — before any state mutates — while
+        the ``crashed`` fault flag is set.  Recorded step times are scaled
+        by ``step_time_scale`` (the straggler-fault surface: a throttled
+        replica reports dilated ticks without actually sleeping).
+        """
+        if self.crashed:
+            raise ReplicaCrashed(
+                f"engine is crashed (fault-injected); tick {self.tick}"
+            )
+        t_step0 = time.perf_counter()
+        self.tick += 1
+        if self._quarantined:  # lanes whose bench time has elapsed come back
+            self._quarantined = {
+                lane: t for lane, t in self._quarantined.items() if t > self.tick
+            }
         self._release_cancelled()
+        self._expire_deadlines()
         admitted = self._admit()
         if admitted:
             self._prefill(admitted)
@@ -600,36 +829,52 @@ class ServeEngine:
                     self._grow_lane(lane)
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
+            self.last_step_s = (time.perf_counter() - t_step0) * self.step_time_scale
             return
         t0 = time.perf_counter()
         bt_args = (jnp.asarray(self._bt),) if self.paged else ()
-        logits, self.cache = self._decode(
-            self.params, self.cache, *bt_args, self.last_token, self.pos
+        logits, self.cache = self._call_compiled(
+            "decode", self.params, self.cache, *bt_args, self.last_token, self.pos
         )
+        if self._inject_nan_lanes:  # fault surface: poison the real logits
+            for lane in sorted(self._inject_nan_lanes):
+                if 0 <= lane < self.cfg.n_slots:
+                    logits = logits.at[lane].set(jnp.nan)
+        bad = []
+        if self.cfg.nan_guard:
+            finite = np.asarray(jnp.all(jnp.isfinite(logits), axis=-1))
+            bad = [i for i in active if not finite[i]]
         next_tok = self.cfg.sampler(logits)
         jax.block_until_ready(next_tok)
         t_decode = time.perf_counter() - t0
+        for i in bad:  # quarantine before pos advances: the lane pads out
+            self._quarantine_lane(i, self.slots[i])
+        ok = [i for i in active if i not in bad]
         self.last_token = next_tok
         # pad lanes must stay at the sentinel (a pad-lane write would land in
-        # pool pages someone else owns); active lanes advance by one
+        # pool pages someone else owns); surviving active lanes advance by one
         if self.paged:
             adv = jnp.zeros((self.cfg.n_slots,), jnp.int32)
-            for i in active:
+            for i in ok:
                 adv = adv.at[i].set(1)
             self.pos = self.pos + adv
         else:
             self.pos = self.pos + 1
         toks = np.asarray(next_tok)
-        for i in active:
+        for i in ok:
             s = self.slots[i]
             self._lane_pos[i] += 1
             s._record_token(int(toks[i]))
             reason = self._finish_reason(i, s, int(toks[i]))
             if reason:
                 self._finalize(i, s, reason)
-        self.metrics.record_tick(time.perf_counter() - t0, t_decode, len(active))
+        scale = self.step_time_scale
+        self.metrics.record_tick(
+            (time.perf_counter() - t0) * scale, t_decode * scale, len(active)
+        )
         if self.paged:
             self.metrics.record_pages(self.allocator.used)
+        self.last_step_s = (time.perf_counter() - t_step0) * scale
 
     # ------------------------------------------------------------------
     def has_work(self) -> bool:
@@ -637,11 +882,25 @@ class ServeEngine:
 
     def run(self, max_ticks: int = 10_000) -> list:
         """Drive until drained (or ``max_ticks``); returns finished sessions
-        (cancelled ones included, ``finish_reason == "cancelled"``)."""
+        (cancelled ones included, ``finish_reason == "cancelled"``).
+
+        Exhausting the tick budget with work still pending is surfaced — a
+        ``RuntimeWarning`` plus the ``tick_budget_exhausted`` metrics counter
+        — instead of returning silently with sessions stranded in flight.
+        """
         ticks = 0
         while self.has_work() and ticks < max_ticks:
             self.step()
             ticks += 1
+        if self.has_work():
+            self.metrics.record_tick_budget_exhausted()
+            warnings.warn(
+                f"run(max_ticks={max_ticks}) stopped with work still pending "
+                f"({sum(s is not None for s in self.slots)} active lane(s), "
+                f"{self.scheduler.pending()} queued)",
+                RuntimeWarning,
+                stacklevel=2,
+            )
         return self.finished
 
     def drain(self) -> list:
@@ -649,8 +908,11 @@ class ServeEngine:
 
         Slot lanes are released (paged lanes return their pages) and every
         live session — running or queued — comes back in ``QUEUED`` state.
-        Because a re-admitted session replays prompt+output through prefill
-        (the recompute-preemption invariant), the returned sessions can be
+        Only slot-drained sessions count a preemption: they lose in-flight
+        lane state and must replay through prefill, while queue-drained ones
+        never held a lane and re-enter exactly as they were.  Because a
+        re-admitted session replays prompt+output through prefill (the
+        recompute-preemption invariant), the returned sessions can be
         re-submitted to any engine over the same params and resume
         token-exact.  This is the replica-failure path of
         :class:`~repro.serve.cluster.ClusterRouter`.
@@ -666,20 +928,23 @@ class ServeEngine:
         # otherwise pull through select with n_free clamped up to n_slots so
         # batch-boundary policies release too.  A custom policy that still
         # withholds sessions while claiming pending work would loop forever,
-        # so stop when select comes back empty.
+        # so stop when select comes back empty (tested: a withholding
+        # scheduler strands its queue but drain() itself must terminate).
         drainer = getattr(self.scheduler, "drain", None)
         if drainer is not None:
-            drained.extend(drainer())
+            queued = list(drainer())
         else:
+            queued = []
             while self.scheduler.pending() > 0:
                 batch = self.scheduler.select(
                     max(self.scheduler.pending(), self.cfg.n_slots), self.cfg.n_slots
                 )
                 if not batch:
                     break
-                drained.extend(batch)
-        for session in drained:
-            session.status = QUEUED
+                queued.extend(batch)
+        for session in queued:
+            session.status = QUEUED  # no lane lost: not a preemption
+            drained.append(session)
         return drained
 
     def summary(self) -> dict:

@@ -51,6 +51,14 @@ class EngineMetrics:
         self.preemptions = 0  # lanes evicted to free pages
         self.prefix_hits = 0  # admissions that forked a shared prefix
         self.prefix_tokens_reused = 0  # prompt tokens NOT re-prefilled
+        # robustness counters (see docs/robustness.md)
+        self.deadline_expired = 0  # sessions finished with reason="deadline"
+        self.deadline_tokens = 0  # tokens generated for deadline-missed sessions
+        self.requeues = 0  # budgeted requeues (preempt/drain/quarantine/failover)
+        self.quarantines = 0  # lanes benched after non-finite logits
+        self.nan_events = 0  # decode/prefill rows that failed the NaN guard
+        self.degradations = 0  # pallas -> xla backend fallbacks
+        self.tick_budget_exhausted = 0  # run() returns with work still pending
 
     # -- engine hooks ------------------------------------------------------
     def record_tick(self, seconds: float, decode_seconds: float, n_active: int) -> None:
@@ -73,12 +81,32 @@ class EngineMetrics:
         self.prefix_hits += 1
         self.prefix_tokens_reused += tokens_reused
 
+    def record_requeue(self) -> None:
+        self.requeues += 1
+
+    def record_quarantine(self) -> None:
+        self.quarantines += 1
+
+    def record_nan_event(self, n_lanes: int = 1) -> None:
+        self.nan_events += n_lanes
+
+    def record_degradation(self) -> None:
+        self.degradations += 1
+
+    def record_tick_budget_exhausted(self) -> None:
+        self.tick_budget_exhausted += 1
+
     def record_finished(self, session: Session) -> None:
         if session.finish_reason == "cancelled":
             self.cancelled += 1
             return
         self.finished += 1
         self.generated_tokens += len(session.out)
+        if session.finish_reason == "deadline":
+            # still a served request, but its tokens missed the SLA —
+            # excluded from goodput, tracked separately
+            self.deadline_expired += 1
+            self.deadline_tokens += len(session.out)
         if session.stats.ttft_s is not None:
             self.ttft_s.append(session.stats.ttft_s)
         self.token_latency_s.extend(session.stats.token_latencies_s)
@@ -124,6 +152,19 @@ class EngineMetrics:
             "preemptions": self.preemptions,
             "prefix_hits": self.prefix_hits,
             "prefix_tokens_reused": self.prefix_tokens_reused,
+            # goodput: tokens generated for sessions that met their deadline
+            # (== generated for engines without deadlines)
+            "goodput_tokens": self.generated_tokens - self.deadline_tokens,
+            "goodput_tok_s": (
+                (self.generated_tokens - self.deadline_tokens) / total_s
+                if total_s else 0.0
+            ),
+            "deadline_expired": self.deadline_expired,
+            "requeues": self.requeues,
+            "quarantines": self.quarantines,
+            "nan_events": self.nan_events,
+            "degradations": self.degradations,
+            "tick_budget_exhausted": self.tick_budget_exhausted,
         }
 
     def to_records(self, benchmark: str, prefix: str, x=None) -> list:
@@ -195,6 +236,42 @@ class EngineMetrics:
                 metrics={**shared, "n_slots": self.n_slots},
                 info="mean concurrently-active lanes (absolute slot occupancy)",
             ),
+            BenchRecord(
+                name=f"{prefix}_goodput",
+                benchmark=benchmark,
+                x=x,
+                value=s["goodput_tok_s"],
+                unit="tok/s",
+                better="higher",
+                metrics={
+                    **shared,
+                    "goodput_tokens": s["goodput_tokens"],
+                    "deadline_expired": s["deadline_expired"],
+                },
+                info="deadline-met tokens / engine wall-clock",
+            ),
+            BenchRecord(
+                name=f"{prefix}_faults",
+                benchmark=benchmark,
+                x=x,
+                value=float(
+                    s["requeues"] + s["quarantines"] + s["nan_events"]
+                    + s["degradations"] + s["deadline_expired"]
+                ),
+                unit="count",
+                better="info",
+                metrics={
+                    **shared,
+                    "requeues": s["requeues"],
+                    "quarantines": s["quarantines"],
+                    "nan_events": s["nan_events"],
+                    "degradations": s["degradations"],
+                    "deadline_expired": s["deadline_expired"],
+                    "preemptions": s["preemptions"],
+                    "tick_budget_exhausted": s["tick_budget_exhausted"],
+                },
+                info="fault-handling events (requeue/quarantine/nan/degrade/deadline)",
+            ),
         ]
         if self.n_pages:
             rows.append(
@@ -241,14 +318,40 @@ class ClusterMetrics:
         self.requeued_tokens = 0  # generated tokens carried through requeue
         self.routed = 0  # submit() placements (first placement only)
         self.wall_s = 0.0  # router-measured serving wall-clock
+        # robustness counters (see docs/robustness.md)
+        self.failovers: dict = {}  # failover reason -> count (manual/heartbeat/...)
+        self.failover_skipped = 0  # detections left unactioned (last live replica)
+        self.half_opens = 0  # cooled-down replicas probed back in
+        self.revivals = 0  # half-open probes that fully closed the breaker
+        self.live_replica_ticks = 0  # sum over ticks of live replicas
+        self.total_replica_ticks = 0  # sum over ticks of configured replicas
+        self.tick_budget_exhausted = 0  # run() returns with work still pending
 
     def record_route(self) -> None:
         self.routed += 1
 
-    def record_failure(self, drained: Sequence[Session]) -> None:
+    def record_failure(self, drained: Sequence[Session], reason: str = "manual") -> None:
         self.failures += 1
+        self.failovers[reason] = self.failovers.get(reason, 0) + 1
         self.requeued_sessions += len(drained)
         self.requeued_tokens += sum(len(s.out) for s in drained)
+
+    def record_liveness(self, n_alive: int, n_total: int) -> None:
+        """Per-tick availability sample: live replicas out of configured."""
+        self.live_replica_ticks += n_alive
+        self.total_replica_ticks += n_total
+
+    def record_failover_skipped(self) -> None:
+        self.failover_skipped += 1
+
+    def record_half_open(self) -> None:
+        self.half_opens += 1
+
+    def record_revival(self) -> None:
+        self.revivals += 1
+
+    def record_tick_budget_exhausted(self) -> None:
+        self.tick_budget_exhausted += 1
 
     # -- derived -----------------------------------------------------------
     def summary(self, parts: Sequence[EngineMetrics]) -> dict:
@@ -297,6 +400,29 @@ class ClusterMetrics:
             "failures": self.failures,
             "requeued_sessions": self.requeued_sessions,
             "requeued_tokens": self.requeued_tokens,
+            # robustness roll-up: engine fault counters summed, plus the
+            # router-level availability/failover view
+            "goodput_tokens": sum(m.summary()["goodput_tokens"] for m in parts),
+            "goodput_tok_s": (
+                sum(m.summary()["goodput_tokens"] for m in parts) / total_s
+                if total_s else 0.0
+            ),
+            "deadline_expired": sum(m.deadline_expired for m in parts),
+            "requeues": sum(m.requeues for m in parts),
+            "quarantines": sum(m.quarantines for m in parts),
+            "nan_events": sum(m.nan_events for m in parts),
+            "degradations": sum(m.degradations for m in parts),
+            "failovers": dict(self.failovers),
+            "failover_skipped": self.failover_skipped,
+            "half_opens": self.half_opens,
+            "revivals": self.revivals,
+            # fraction of replica-ticks with the replica alive (1.0 when no
+            # liveness samples were recorded, i.e. health monitoring off)
+            "availability": (
+                self.live_replica_ticks / self.total_replica_ticks
+                if self.total_replica_ticks else 1.0
+            ),
+            "tick_budget_exhausted": self.tick_budget_exhausted,
         }
 
     def to_records(
@@ -355,5 +481,59 @@ class ClusterMetrics:
                 better="info",
                 metrics={**shared, "concurrency": s["concurrency"]},
                 info="slot-weighted mean occupancy across replicas",
+            ),
+            BenchRecord(
+                name=f"{prefix}_goodput",
+                benchmark=benchmark,
+                x=x,
+                value=s["goodput_tok_s"],
+                unit="tok/s",
+                better="higher",
+                metrics={
+                    **shared,
+                    "goodput_tokens": s["goodput_tokens"],
+                    "deadline_expired": s["deadline_expired"],
+                },
+                info="deadline-met tokens / router wall-clock",
+            ),
+            BenchRecord(
+                name=f"{prefix}_availability",
+                benchmark=benchmark,
+                x=x,
+                value=s["availability"],
+                unit="frac",
+                better="higher",
+                metrics={
+                    **shared,
+                    # record metrics are numeric: the by-reason breakdown
+                    # stays in summary()["failovers"]
+                    "failovers": sum(s["failovers"].values()),
+                    "failover_skipped": s["failover_skipped"],
+                    "half_opens": s["half_opens"],
+                    "revivals": s["revivals"],
+                },
+                info="live replica-ticks / configured replica-ticks",
+            ),
+            BenchRecord(
+                name=f"{prefix}_faults",
+                benchmark=benchmark,
+                x=x,
+                value=float(
+                    s["requeues"] + s["quarantines"] + s["nan_events"]
+                    + s["degradations"] + s["deadline_expired"] + s["failures"]
+                ),
+                unit="count",
+                better="info",
+                metrics={
+                    **shared,
+                    "requeues": s["requeues"],
+                    "quarantines": s["quarantines"],
+                    "nan_events": s["nan_events"],
+                    "degradations": s["degradations"],
+                    "deadline_expired": s["deadline_expired"],
+                    "failovers": sum(s["failovers"].values()),
+                    "tick_budget_exhausted": s["tick_budget_exhausted"],
+                },
+                info="cluster fault-handling events (incl. replica failovers)",
             ),
         ]

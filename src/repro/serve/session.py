@@ -25,6 +25,7 @@ FINISH_EOS = "eos"
 FINISH_MAX_NEW_TOKENS = "max_new_tokens"
 FINISH_MAX_LEN = "max_len"
 FINISH_CANCELLED = "cancelled"
+FINISH_DEADLINE = "deadline"  # per-request deadline expired before completion
 
 
 @dataclass
@@ -37,6 +38,11 @@ class RequestStats:
     finished_at: Optional[float] = None
     token_times: list = field(default_factory=list)
     preemptions: int = 0  # times evicted (paged pool pressure) and resumed
+    # times the engine put the session back in the queue after it had been
+    # drained / preempted / quarantined — the retry-budget denominator
+    # (pool-misfit waits in paged admission do NOT count; see
+    # ServeEngine.requeue)
+    requeues: int = 0
 
     @property
     def ttft_s(self) -> Optional[float]:
@@ -67,6 +73,9 @@ class Session:
     max_new_tokens: int
     priority: int = 0  # higher admits first under PriorityScheduler
     on_token: Optional[Callable] = None  # fn(session, token) per generated token
+    # wall-clock budget from submit; when it runs out the engine finishes the
+    # session with finish_reason="deadline" and partial output (None: no limit)
+    deadline_s: Optional[float] = None
     status: str = QUEUED
     out: list = field(default_factory=list)
     finish_reason: str = ""
@@ -75,6 +84,15 @@ class Session:
     # set by the engine at submit so queued-cancels still reach its
     # metrics/finished accounting (running cancels go through the step loop)
     _on_queued_cancel: Optional[Callable] = field(default=None, repr=False)
+    # engine tick before which a requeued session must not be re-admitted
+    # (exponential backoff; see ServeEngine.requeue)
+    _backoff_until: int = field(default=0, repr=False)
+
+    def deadline_expired(self, now: Optional[float] = None) -> bool:
+        if self.deadline_s is None:
+            return False
+        now = time.perf_counter() if now is None else now
+        return now - self.stats.submitted_at > self.deadline_s
 
     @property
     def done(self) -> bool:

@@ -34,6 +34,8 @@ _SMOKE_OVERRIDES = {
     **{f"serving_scaled[{b}]": {"tps": (1,), "replicas": (1, 2), "requests": 2,
                                 "prompt_len": 4, "out_len": 3, "page_sizes": (4,)}
        for b in ("pallas", "xla")},
+    **{f"serving_chaos[{b}]": {"requests": 2, "prompt_len": 4, "out_len": 3}
+       for b in ("pallas", "xla")},
 }
 
 
@@ -75,7 +77,8 @@ def test_runner_select_filters_by_prefix():
      "bandwidth[pallas]", "bandwidth[xla]", "memhier[pallas]", "memhier[xla]",
      "scheduler[pallas]", "scheduler[xla]", "gemm_lp[pallas]", "gemm_lp[xla]",
      "serving[pallas]", "serving[xla]",
-     "serving_scaled[pallas]", "serving_scaled[xla]"],
+     "serving_scaled[pallas]", "serving_scaled[xla]",
+     "serving_chaos[pallas]", "serving_chaos[xla]"],
 )
 def test_quick_mode_produces_valid_records(quick_records, name):
     recs = quick_records[name]

@@ -183,6 +183,7 @@ def test_cluster_metrics_aggregate(gemma):
     assert {r.name for r in recs} == {
         "cluster_ttft", "cluster_tok_latency_p95",
         "cluster_throughput", "cluster_occupancy",
+        "cluster_goodput", "cluster_availability", "cluster_faults",
     }
     for r in recs:
         assert r.metrics["replicas"] == 2
@@ -280,6 +281,106 @@ def test_engine_drain_without_scheduler_drain(gemma):
         engine.submit(p, 4)
     drained = engine.drain()
     assert len(drained) == 4 and engine.scheduler.pending() == 0
+
+
+def test_drain_counts_preemptions_for_slot_drained_only(gemma):
+    cfg, model, params = gemma
+    engine = ServeEngine(model, params,
+                         EngineConfig(n_slots=2, max_len=32, prefill_chunk=4))
+    sessions = [engine.submit(p, 8) for p in _prompts(cfg, 5, seed=5)]
+    engine.step()  # two in lanes, three still queued
+    running = [s for s in sessions if s.status != "queued"]
+    assert len(running) == 2
+    drained = engine.drain()
+    assert len(drained) == 5
+    # only the lane-holders replay through prefill; queue-drained sessions
+    # re-enter exactly as they were
+    for s in drained:
+        assert s.stats.preemptions == (1 if s in running else 0)
+
+
+class _WithholdingScheduler(_NoDrainFCFS):
+    """Claims pending work but never releases it — drain() must terminate
+    (and strand the queue) instead of spinning on select()."""
+
+    def select(self, n_free, n_slots):
+        return []
+
+
+def test_drain_terminates_against_withholding_scheduler(gemma):
+    cfg, model, params = gemma
+    engine = ServeEngine(
+        model, params, EngineConfig(n_slots=2, max_len=32, prefill_chunk=4),
+        scheduler=_WithholdingScheduler())
+    for p in _prompts(cfg, 3, seed=6):
+        engine.submit(p, 4)
+    drained = engine.drain()  # would loop forever without the empty-batch stop
+    assert drained == []
+    assert engine.scheduler.pending() == 3  # stranded, but drain() returned
+
+
+def test_failover_reroutes_registered_prefix_sessions(gemma):
+    cfg, model, params = gemma
+    cluster = ClusterRouter(model, params, ClusterConfig(
+        engine=EngineConfig(n_slots=2, max_len=32, prefill_chunk=4,
+                            page_size=4),
+        n_replicas=2, router="prefix_affinity"))
+    prefix = [1, 2, 3, 4]
+    cluster.register_prefix(prefix, replica=0)
+    sessions = [cluster.submit(prefix + [t], 6) for t in (5, 6, 7)]
+    ref = _reference_outputs(model, params,
+                             [s.prompt for s in sessions], max_new=6,
+                             page_size=4)
+    cluster.step()
+    drained = cluster.fail_replica(0)  # the prefix owner goes down
+    assert drained
+    # affinity forgot replica 0: the drained sessions land on the survivor
+    # (which has no shared pages for the prefix) and still finish token-exact
+    assert all(cluster._placement[s.rid] == 1 for s in drained)
+    cluster.run()
+    for s in sessions:
+        assert s.done and s.out == ref[tuple(s.prompt)]
+    assert cluster.replicas[1].engine.metrics.prefix_hits == 0
+
+
+def test_register_router_custom_policy(gemma):
+    from repro.serve import ROUTERS, RouterPolicy, register_router
+
+    class _PinToLast(RouterPolicy):
+        def place(self, prompt, priority, replicas):
+            return max(r.index for r in replicas if r.alive)
+
+    try:
+        register_router("pin_to_last", _PinToLast)
+        assert ROUTERS["pin_to_last"] is _PinToLast
+        assert isinstance(make_router("pin_to_last"), _PinToLast)
+        with pytest.raises(ValueError, match="already registered"):
+            register_router("pin_to_last", _PinToLast)
+        # registered names pass ClusterConfig validation and route for real
+        cfg, model, params = gemma
+        cluster = ClusterRouter(model, params, ClusterConfig(
+            engine=EngineConfig(n_slots=2, max_len=32, prefill_chunk=4),
+            n_replicas=2, router="pin_to_last"))
+        s = cluster.submit(_prompts(cfg, 1)[0], 4)
+        assert cluster._placement[s.rid] == 1
+        cluster.run()
+        assert s.done
+    finally:
+        ROUTERS.pop("pin_to_last", None)
+
+
+def test_register_router_as_decorator():
+    from repro.serve import ROUTERS, RouterPolicy, register_router
+
+    try:
+        @register_router("decorated")
+        class _Decorated(RouterPolicy):
+            def place(self, prompt, priority, replicas):
+                return 0
+
+        assert ROUTERS["decorated"] is _Decorated
+    finally:
+        ROUTERS.pop("decorated", None)
 
 
 def test_cluster_config_rejects_engine_mesh(gemma):

@@ -1,0 +1,406 @@
+"""Chaos hardening: fault injection, health failover, deadlines, degradation.
+
+The acceptance contract from docs/robustness.md drives these tests: a
+scripted chaos run (replica crash + straggler slowdown + one pallas fault)
+completes with zero lost sessions and token-exact output for every
+non-deadline session, `finish_reason="deadline"` fires only for unmeetable
+deadlines, and the whole thing — tokens and fault/retry/degradation
+counters — is deterministic across two runs with the same seed.
+"""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import (
+    ClusterConfig,
+    ClusterRouter,
+    EngineConfig,
+    Fault,
+    FaultInjector,
+    FaultPlan,
+    HealthConfig,
+    ReplicaCrashed,
+    RetryBudgetExceeded,
+    ServeEngine,
+)
+from repro.serve.cluster import BREAKER_CLOSED, BREAKER_OPEN
+
+
+@pytest.fixture(scope="module")
+def gemma():
+    cfg = get_config("gemma-2b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _prompts(cfg, n, lens=(3, 5, 4), seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        [int(t) for t in rng.integers(1, cfg.vocab_size, lens[i % len(lens)])]
+        for i in range(n)
+    ]
+
+
+def _reference_outputs(model, params, prompts, max_new=8, **cfg_kw):
+    engine = ServeEngine(
+        model, params, EngineConfig(n_slots=2, max_len=32, prefill_chunk=4, **cfg_kw)
+    )
+    sessions = [engine.submit(p, max_new) for p in prompts]
+    engine.run()
+    return {tuple(p): s.out for p, s in zip(prompts, sessions)}
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("prefill_chunk", 4)
+    kw.setdefault("backend", "xla")
+    return ServeEngine(model, params, EngineConfig(**kw))
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan / Fault (unit, no engines)
+# ---------------------------------------------------------------------------
+def test_fault_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault(tick=0, kind="meteor")
+    with pytest.raises(ValueError, match="duration"):
+        Fault(tick=0, kind="crash", duration=0)
+    with pytest.raises(ValueError, match="factor"):
+        Fault(tick=0, kind="straggler", factor=1.0)
+    with pytest.raises(ValueError, match="tick"):
+        Fault(tick=-1, kind="crash")
+
+
+def test_fault_plan_random_deterministic():
+    a = FaultPlan.random(7, n_ticks=16, n_faults=5, n_replicas=3)
+    b = FaultPlan.random(7, n_ticks=16, n_faults=5, n_replicas=3)
+    assert a == b and a.seed == 7
+    assert len(a.faults) == 5
+    assert all(1 <= f.tick < 16 and f.replica < 3 for f in a.faults)
+    assert FaultPlan.random(8, n_ticks=16, n_faults=5) != a
+    # sorted by tick; horizon covers the longest fault
+    ticks = [f.tick for f in a.faults]
+    assert ticks == sorted(ticks)
+    assert a.horizon == max(f.tick + f.duration for f in a.faults)
+
+
+def test_injector_rejects_out_of_range_replica(gemma):
+    cfg, model, params = gemma
+    engine = _engine(model, params)
+    plan = FaultPlan(faults=(Fault(tick=1, kind="crash", replica=3),))
+    with pytest.raises(ValueError, match="replica"):
+        FaultInjector(plan, engine)
+
+
+# ---------------------------------------------------------------------------
+# the acceptance criterion: scripted chaos, deterministic, zero loss
+# ---------------------------------------------------------------------------
+def _chaos_cluster(model, params, page_size=4):
+    return ClusterRouter(model, params, ClusterConfig(
+        engine=EngineConfig(n_slots=2, max_len=32, prefill_chunk=4,
+                            backend="xla", page_size=page_size),
+        n_replicas=2,
+        router="round_robin",
+        health=HealthConfig(heartbeat_timeout=2, min_samples=3,
+                            margin=0.25, cooldown=50),
+    ))
+
+
+_SCRIPTED_PLAN = FaultPlan(faults=(
+    Fault(tick=2, kind="crash", replica=0, duration=4),  # replica crash @ N
+    Fault(tick=3, kind="straggler", replica=1, duration=3, factor=4.0),
+    Fault(tick=6, kind="kernel_fault", replica=1),  # one pallas-style fault
+    Fault(tick=7, kind="nan_logits", replica=1, lanes=(0,), duration=1),
+))
+
+
+def _run_scripted(cfg, model, params, prompts):
+    cluster = _chaos_cluster(model, params)
+    sessions = [cluster.submit(p, 8) for p in prompts]
+    injector = FaultInjector(_SCRIPTED_PLAN, cluster)
+    injector.run()
+    return cluster, sessions, injector
+
+
+def test_scripted_chaos_zero_loss_token_exact_deterministic(gemma):
+    cfg, model, params = gemma
+    prompts = _prompts(cfg, 6, seed=3)
+    ref = _reference_outputs(model, params, prompts, page_size=4)
+
+    cluster, sessions, injector = _run_scripted(cfg, model, params, prompts)
+    # zero lost sessions, token-exact for every (non-deadline) session
+    assert len(cluster.finished) == len(prompts)
+    for p, s in zip(prompts, sessions):
+        assert s.done and s.finish_reason != "deadline"
+        assert s.out == ref[tuple(p)], ("chaos divergence", p)
+    summ = cluster.summary()
+    assert summ["failovers"], "the crash must have driven a failover"
+    assert summ["requeues"] >= 1 and summ["quarantines"] == 1
+    assert 0 < summ["availability"] < 1
+    assert injector.summary()["applied"]["crash"] == 1
+
+    # the whole run replays exactly: tokens AND counters
+    cluster2, sessions2, injector2 = _run_scripted(cfg, model, params, prompts)
+    assert [s.out for s in sessions2] == [s.out for s in sessions]
+    k = ("requeues", "quarantines", "nan_events", "degradations",
+         "deadline_expired", "failovers", "requeued_sessions")
+    summ2 = cluster2.summary()
+    assert {x: summ2[x] for x in k} == {x: summ[x] for x in k}
+    assert injector2.summary() == injector.summary()
+
+
+# ---------------------------------------------------------------------------
+# health-driven failover
+# ---------------------------------------------------------------------------
+def test_heartbeat_failover_on_crash(gemma):
+    cfg, model, params = gemma
+    prompts = _prompts(cfg, 4, seed=4)
+    ref = _reference_outputs(model, params, prompts)
+    cluster = ClusterRouter(model, params, ClusterConfig(
+        engine=EngineConfig(n_slots=2, max_len=32, prefill_chunk=4,
+                            backend="xla"),
+        n_replicas=2, router="round_robin",
+        health=HealthConfig(heartbeat_timeout=2, straggler=False, cooldown=50),
+    ))
+    sessions = [cluster.submit(p, 8) for p in prompts]
+    plan = FaultPlan(faults=(Fault(tick=1, kind="crash", replica=0,
+                                   duration=30),))
+    FaultInjector(plan, cluster).run()
+    assert cluster.summary()["failovers"] == {"heartbeat": 1}
+    assert not cluster.replicas[0].alive
+    assert cluster.replicas[0].breaker == BREAKER_OPEN  # cooldown > run length
+    for p, s in zip(prompts, sessions):
+        assert s.done and s.out == ref[tuple(p)]
+
+
+def test_straggler_failover_breaker_reopens_and_revives(gemma):
+    cfg, model, params = gemma
+    cluster = ClusterRouter(model, params, ClusterConfig(
+        engine=EngineConfig(n_slots=2, max_len=32, prefill_chunk=4,
+                            backend="xla"),
+        n_replicas=2, router="round_robin",
+        health=HealthConfig(heartbeat_timeout=3, min_samples=3, margin=0.25,
+                            cooldown=2, probe_ticks=2, warmup_ticks=2),
+    ))
+    prompts = _prompts(cfg, 8, lens=(5,), seed=5)
+    sessions = [cluster.submit(p, 16) for p in prompts]
+    plan = FaultPlan(faults=(Fault(tick=1, kind="straggler", replica=1,
+                                   duration=8, factor=6.0),))
+    FaultInjector(plan, cluster).run()
+    summ = cluster.summary()
+    assert summ["failovers"].get("straggler", 0) >= 1
+    # cooldown elapsed mid-run: the breaker half-opened and, with the fault
+    # expired, probed healthy back to CLOSED
+    assert summ["half_opens"] >= 1 and summ["revivals"] >= 1
+    assert cluster.replicas[1].alive
+    assert cluster.replicas[1].breaker == BREAKER_CLOSED
+    assert all(s.done for s in sessions)
+
+
+def test_last_replica_failover_is_skipped_not_fatal(gemma):
+    cfg, model, params = gemma
+    cluster = ClusterRouter(model, params, ClusterConfig(
+        engine=EngineConfig(n_slots=2, max_len=32, prefill_chunk=4,
+                            backend="xla"),
+        n_replicas=1,
+        health=HealthConfig(heartbeat_timeout=1, straggler=False, cooldown=3),
+    ))
+    s = cluster.submit(_prompts(cfg, 1)[0], 6)
+    plan = FaultPlan(faults=(Fault(tick=1, kind="crash", duration=4),))
+    FaultInjector(plan, cluster).run()
+    # the only replica is never auto-killed; it resumes after the outage
+    assert cluster.summary()["failover_skipped"] >= 1
+    assert cluster.replicas[0].alive and s.done
+
+
+def test_cluster_without_health_propagates_crash(gemma):
+    cfg, model, params = gemma
+    cluster = ClusterRouter(model, params, ClusterConfig(
+        engine=EngineConfig(n_slots=2, max_len=32, prefill_chunk=4,
+                            backend="xla"),
+        n_replicas=1))
+    cluster.submit(_prompts(cfg, 1)[0], 4)
+    cluster._ensure_replicas()
+    cluster.replicas[0].engine.crashed = True
+    with pytest.raises(ReplicaCrashed):
+        cluster.step()
+
+
+# ---------------------------------------------------------------------------
+# deadlines
+# ---------------------------------------------------------------------------
+def test_deadline_unmeetable_vs_generous(gemma):
+    cfg, model, params = gemma
+    engine = _engine(model, params)
+    p1, p2 = _prompts(cfg, 2, seed=6)
+    tight = engine.submit(p1, 8, deadline_s=1e-9)  # expires before any token
+    loose = engine.submit(p2, 8, deadline_s=3600.0)
+    finished = engine.run()
+    assert len(finished) == 2
+    assert tight.finish_reason == "deadline"
+    assert loose.finish_reason == "max_new_tokens" and len(loose.out) == 8
+    summ = engine.summary()
+    assert summ["deadline_expired"] == 1
+    # goodput excludes the expired session's tokens
+    assert summ["goodput_tokens"] == summ["generated_tokens"] - len(tight.out)
+    with pytest.raises(ValueError, match="deadline_s"):
+        engine.submit(p1, 4, deadline_s=0.0)
+
+
+def test_deadline_expires_in_queue(gemma):
+    cfg, model, params = gemma
+    engine = _engine(model, params, n_slots=1)
+    prompts = _prompts(cfg, 3, seed=7)
+    head = engine.submit(prompts[0], 6)
+    queued = [engine.submit(p, 6, deadline_s=1e-9) for p in prompts[1:]]
+    engine.run()
+    assert head.finish_reason == "max_new_tokens"
+    for s in queued:  # picked by admission after expiry: never held a lane
+        assert s.finish_reason == "deadline" and s.out == []
+    assert engine.summary()["deadline_expired"] == 2
+
+
+# ---------------------------------------------------------------------------
+# retry budget / backoff
+# ---------------------------------------------------------------------------
+def test_retry_budget_exceeded_is_typed(gemma):
+    cfg, model, params = gemma
+    engine = _engine(model, params, retry_budget=1)
+    s = engine.submit(_prompts(cfg, 1)[0], 4)
+    engine.step()  # admit + prefill: the session holds a lane
+    assert s in engine.drain()
+    engine.requeue(s)  # within budget
+    assert s in engine.drain()
+    with pytest.raises(RetryBudgetExceeded) as ei:
+        engine.requeue(s)
+    assert ei.value.session is s and ei.value.budget == 1
+    assert s.stats.requeues == 2
+    assert engine.summary()["requeues"] == 2
+
+
+def test_retry_backoff_delays_readmission(gemma):
+    cfg, model, params = gemma
+    ref = _reference_outputs(model, params, _prompts(cfg, 1, seed=10))
+    engine = _engine(model, params, retry_backoff=4)
+    s = engine.submit(_prompts(cfg, 1, seed=10)[0], 8)
+    engine.step()  # admit + prefill
+    assert s in engine.drain()
+    tick0 = engine.tick
+    engine.requeue(s)  # 1st requeue: backoff 4 * 2**0
+    assert s._backoff_until == tick0 + 4
+    engine.run()
+    assert s.done and s.out == ref[tuple(s.prompt)]  # token-exact resume
+    # no re-admission happened before the backoff horizon
+    assert engine.tick > tick0 + 4
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation / NaN quarantine
+# ---------------------------------------------------------------------------
+def test_kernel_fault_degrades_once_to_xla(gemma):
+    cfg, model, params = gemma
+    prompts = _prompts(cfg, 2, seed=8)
+    ref = _reference_outputs(model, params, prompts)
+    engine = ServeEngine(model, params, EngineConfig(
+        n_slots=2, max_len=32, prefill_chunk=4))  # default (pallas) policy
+    sessions = [engine.submit(p, 8) for p in prompts]
+    engine._inject_step_error = RuntimeError("boom")
+    with pytest.warns(RuntimeWarning, match="degraded to the xla backend"):
+        engine.run()
+    assert engine._degraded and engine._backend() == "xla"
+    assert engine.summary()["degradations"] == 1
+    for p, s in zip(prompts, sessions):
+        assert s.done and s.out == ref[tuple(p)]
+
+
+def test_degrade_disabled_raises(gemma):
+    cfg, model, params = gemma
+    engine = ServeEngine(model, params, EngineConfig(
+        n_slots=2, max_len=32, prefill_chunk=4, degrade=False))
+    engine.submit(_prompts(cfg, 1)[0], 4)
+    engine._inject_step_error = RuntimeError("boom")
+    with pytest.raises(RuntimeError, match="boom"):
+        engine.run()
+
+
+def test_xla_backend_ignores_injected_kernel_fault(gemma):
+    cfg, model, params = gemma
+    engine = _engine(model, params)  # backend="xla": nothing to degrade from
+    s = engine.submit(_prompts(cfg, 1)[0], 4)
+    engine._inject_step_error = RuntimeError("boom")
+    engine.run()
+    assert s.done and engine.summary()["degradations"] == 0
+
+
+def test_nan_quarantine_retries_token_exact(gemma):
+    cfg, model, params = gemma
+    prompts = _prompts(cfg, 2, seed=9)
+    ref = _reference_outputs(model, params, prompts)
+    engine = _engine(model, params, quarantine_ticks=3)
+    sessions = [engine.submit(p, 8) for p in prompts]
+    inj = FaultInjector(
+        FaultPlan(faults=(Fault(tick=2, kind="nan_logits", lanes=(0,)),)),
+        engine)
+    inj.run()
+    summ = engine.summary()
+    assert summ["quarantines"] == 1 and summ["nan_events"] == 1
+    assert summ["requeues"] == 1
+    for p, s in zip(prompts, sessions):  # poisoned token was never recorded
+        assert s.done and s.out == ref[tuple(p)]
+
+
+def test_nan_guard_off_records_poisoned_token(gemma):
+    cfg, model, params = gemma
+    engine = _engine(model, params, nan_guard=False)
+    s = engine.submit(_prompts(cfg, 1)[0], 4)
+    inj = FaultInjector(
+        FaultPlan(faults=(Fault(tick=1, kind="nan_logits", lanes=(0,)),)),
+        engine)
+    inj.run()
+    assert s.done and engine.summary()["quarantines"] == 0
+
+
+def test_page_pressure_steals_and_returns_pages(gemma):
+    cfg, model, params = gemma
+    engine = _engine(model, params, page_size=4)
+    free0 = engine.allocator.free_pages
+    s = engine.submit(_prompts(cfg, 1)[0], 6)
+    inj = FaultInjector(
+        FaultPlan(faults=(Fault(tick=1, kind="page_pressure", pages=3,
+                                duration=4),)),
+        engine)
+    inj.run()
+    assert s.done
+    assert inj.summary()["applied"]["page_pressure"] == 1
+    assert engine.allocator.free_pages == free0  # stolen pages came back
+
+
+def test_page_pressure_skipped_on_dense(gemma):
+    cfg, model, params = gemma
+    engine = _engine(model, params)  # dense KV: nothing to steal
+    s = engine.submit(_prompts(cfg, 1)[0], 4)
+    inj = FaultInjector(
+        FaultPlan(faults=(Fault(tick=1, kind="page_pressure"),)), engine)
+    inj.run()
+    assert s.done and inj.summary()["skipped"] == 1
+
+
+# ---------------------------------------------------------------------------
+# run() exhaustion surfacing
+# ---------------------------------------------------------------------------
+def test_run_max_ticks_exhaustion_warns_and_counts(gemma):
+    cfg, model, params = gemma
+    engine = _engine(model, params)
+    s = engine.submit(_prompts(cfg, 1)[0], 8)
+    with pytest.warns(RuntimeWarning, match="work still pending"):
+        engine.run(max_ticks=1)
+    assert not s.done
+    assert engine.summary()["tick_budget_exhausted"] == 1
+    engine.run()  # finishes cleanly afterwards
+    assert s.done

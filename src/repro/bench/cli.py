@@ -7,9 +7,11 @@
     trend     aggregate per-commit BENCH_<sha>.json artifacts into a
               perf-over-time report (markdown or JSON)
 
-Exit codes: ``run`` is non-zero if any benchmark errored; ``compare`` is
-non-zero if the gate fails (unless ``--warn-only``); ``trend`` is non-zero
-only on input errors (it reports, it does not gate).
+Exit codes: ``run`` is non-zero if any benchmark errored, or — under
+``--guard`` — if the numerics guard saw any drift or saturation on what
+should be a clean run; ``compare`` is non-zero if the gate fails (unless
+``--warn-only``); ``trend`` is non-zero only on input errors (it reports,
+it does not gate).
 """
 from __future__ import annotations
 
@@ -67,7 +69,8 @@ def _cmd_run(args) -> int:
         )
         return 2
     result = runner.run_benchmarks(
-        only=only or None, mode=mode, out_path=args.out, verbose=args.verbose
+        only=only or None, mode=mode, out_path=args.out, verbose=args.verbose,
+        guard=args.guard,
     )
     if args.csv:
         print("name,value,unit,derived")
@@ -82,6 +85,22 @@ def _cmd_run(args) -> int:
         )
     for name, err in sorted(result.errors.items()):
         print(f"ERROR {name}: {err}", file=sys.stderr)
+    if args.guard:
+        from repro.kernels import guard as kguard
+
+        m = kguard.metrics()
+        print(
+            f"guard[{args.guard}]: {m.checks} checks, {m.drift_events} drift, "
+            f"{m.saturation_events} saturation, {m.faults} faults, "
+            f"quarantined={sorted(m.quarantined_ops) or '[]'}",
+            file=sys.stderr,
+        )
+        if m.drift_events or m.saturation_events:
+            print(
+                "guard: drift/saturation detected on a clean run — failing",
+                file=sys.stderr,
+            )
+            return 1
     return 1 if result.errors else 0
 
 
@@ -153,6 +172,11 @@ def main(argv=None) -> int:
     p.add_argument("--only", nargs="*", help="benchmark name prefixes to run (legacy alias)")
     p.add_argument("--out", help="write JSON results to this path")
     p.add_argument("--csv", action="store_true", help="print legacy CSV to stdout")
+    p.add_argument(
+        "--guard", choices=("sample", "shadow"),
+        help="run under the numerics guard; exit 1 on any drift/saturation "
+             "(clean-run zero-drift gate)",
+    )
     p.add_argument("-v", "--verbose", action="store_true")
     p.set_defaults(fn=_cmd_run)
 

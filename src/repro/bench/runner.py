@@ -36,14 +36,38 @@ def run_benchmarks(
     mode: str = "quick",
     out_path: Optional[str] = None,
     verbose: bool = False,
+    guard: Optional[str] = None,
 ) -> BenchResult:
+    """Run the selected benchmarks; with ``guard`` set (``"sample"`` /
+    ``"shadow"``) the whole run executes under the numerics guard
+    (``kernel_policy(guard=...)``): a fresh guard state, a canonical
+    shadow-verification sweep of every probe-registered kernel op up front
+    (timing loops use ``op.bound()`` and are deliberately guard-free, so the
+    sweep is what makes a clean-run drift gate meaningful), and the guard's
+    schema-v1 activity records appended to the result.  Suites that inject
+    faults on purpose isolate their guard state, so a clean run reports
+    zero drift.
+    """
     names = select(only)
     records, errors, timings = [], {}, {}
+    if guard is not None:
+        from repro.kernels import api as _kapi
+        from repro.kernels import guard as _kguard
+
+        _kguard.reset()
+        sweep = _kguard.verify_ops()
+        if verbose:
+            ok = sum(r.ok for r in sweep.values())
+            print(f"  guard: verified {ok}/{len(sweep)} kernel ops clean")
     for name in names:
         spec = registry.get(name)
         t0 = time.perf_counter()
         try:
-            recs = spec.run(mode)
+            if guard is not None:
+                with _kapi.kernel_policy(guard=guard):
+                    recs = spec.run(mode)
+            else:
+                recs = spec.run(mode)
         except Exception as e:
             errors[name] = f"{type(e).__name__}: {e}"
             if verbose:
@@ -59,6 +83,10 @@ def run_benchmarks(
             records.extend(recs)
         if verbose:
             print(f"  {name}: {len(recs)} records in {timings[name]:.1f}s")
+    if guard is not None:
+        records.extend(
+            _kguard.metrics().to_records("guard", "guard", x=guard)
+        )
     result = BenchResult(
         mode=mode,
         env=EnvFingerprint.capture(),

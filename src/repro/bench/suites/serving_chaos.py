@@ -13,6 +13,21 @@ a health-monitored two-replica cluster:
   degradation), poisons one lane's logits with NaN (quarantine + retry),
   and steals free KV pages (admission pressure).
 
+On pallas-like backends two **guarded** legs run the same workload with the
+numerics guard armed (``EngineConfig(guard="shadow")``), each inside
+:func:`repro.kernels.guard.isolated` so intentional injections never leak
+into the process-global guard state:
+
+- **guarded-clean**: shadow-checks every compiled step against the ``xla``
+  oracle and must report *zero* drift and token-exact output — the
+  false-positive gate for the tolerance ladder,
+- **guarded-faulted** (``serving_chaos_guarded_*``): an op-targeted
+  :func:`_guard_fault_plan` injects a seeded numeric drift on ``matmul``
+  and a simulated pallas fault on ``flash_attention``; the guard must
+  detect every injected drift call, quarantine exactly those two ops (no
+  whole-engine degradation), revive them once the faults expire, and still
+  emit tokens exactly matching the clean run.
+
 Both runs emit the full cluster row set — TTFT, latency, throughput, plus
 the robustness rows (``*_goodput``, ``*_availability``, ``*_faults``) whose
 clean-vs-faulted delta is the headline.  The driver *asserts* the chaos
@@ -52,12 +67,32 @@ def _fault_plan():
     ))
 
 
+def _guard_fault_plan():
+    """Op-targeted schedule for the guarded legs: a seeded numeric drift on
+    ``matmul`` (caught by the shadow oracle, attributed, quarantined) and a
+    simulated pallas fault on ``flash_attention`` (attributed to the op
+    instead of triggering a whole-engine degrade).  Both expire mid-run so
+    the breaker's cooldown + half-open probe revives the ops before the
+    drive ends.
+    """
+    from repro.serve import Fault, FaultPlan
+
+    return FaultPlan(seed=7, faults=(
+        Fault(tick=3, kind="kernel_drift", replica=1, duration=2,
+              op="matmul", drift_scale=0.25),
+        Fault(tick=7, kind="kernel_fault", replica=1, op="flash_attention"),
+    ))
+
+
 def _drive_chaos(cfg, model, params, *, backend, n_slots, prompt_len, out_len,
-                 requests, prefill_chunk, page_size, seed=0, plan=None):
+                 requests, prefill_chunk, page_size, seed=0, plan=None,
+                 guard=None):
     """One measured cluster run over seeded prompts; ``plan`` switches the
-    measured batch from a plain ``run()`` to a fault-injected drive.  The
-    warm-up batch also ages each replica past the straggler warm-up gate so
-    the measured run's detector is armed.  Returns ``(cluster, sessions)``.
+    measured batch from a plain ``run()`` to a fault-injected drive, and
+    ``guard`` arms the engines' numerics guard (short re-probe cooldown so
+    quarantined ops revive within the drive).  The warm-up batch also ages
+    each replica past the straggler warm-up gate so the measured run's
+    detector is armed.  Returns ``(cluster, sessions)``.
     """
     from repro.serve import (
         ClusterConfig,
@@ -74,11 +109,17 @@ def _drive_chaos(cfg, model, params, *, backend, n_slots, prompt_len, out_len,
             prefill_chunk=prefill_chunk,
             page_size=page_size,
             backend=backend,
+            guard=guard,
+            guard_cooldown=2 if guard else 8,
         ),
         n_replicas=2,
         router="round_robin",  # deterministic placement for the contrast
+        # guarded legs shadow-execute every step, which reshapes wall-clock
+        # step times; they gate numerics, not timing, so the (inherently
+        # wall-clock) straggler detector stays off there for determinism
         health=HealthConfig(heartbeat_timeout=2, min_samples=3,
-                            margin=0.25, cooldown=6, warmup_ticks=6),
+                            margin=0.25, cooldown=6, warmup_ticks=6,
+                            straggler=guard is None),
     ))
     rng = np.random.default_rng(seed)
 
@@ -120,7 +161,9 @@ def bench_serving_chaos(n_slots=2, prompt_len=8, out_len=8, requests=6,
                         backend="xla") -> list:
     """Clean and faulted runs over the same seeded workload; the faulted
     run must lose nothing and stay token-exact (non-deadline sessions)
-    before its rows are reported."""
+    before its rows are reported.  On pallas-like backends two guarded
+    legs additionally prove the numerics guard's contract (zero drift on
+    clean, 100% detection + op-scoped quarantine on injected drift)."""
     cfg, model, params = _build_model()
     common = dict(backend=backend, n_slots=n_slots, prompt_len=prompt_len,
                   out_len=out_len, requests=requests,
@@ -143,4 +186,83 @@ def bench_serving_chaos(n_slots=2, prompt_len=8, out_len=8, requests=6,
         "serving_chaos", "serving_chaos_clean", x="clean"))
     recs.extend(faulted.to_records(
         "serving_chaos", "serving_chaos_faulted", x="faulted"))
+    # the guarded legs' fixed inject->detect->quarantine->heal schedule
+    # needs enough measured ticks to play out; trimmed smoke workloads
+    # (tier-1's sweep overrides) skip them — tests/test_guard.py covers the
+    # same contract at engine scale
+    if backend != "xla" and requests * out_len >= 32:
+        recs.extend(_guarded_legs(cfg, model, params, clean_sessions, common))
+    return recs
+
+
+def _guarded_legs(cfg, model, params, clean_sessions, common) -> list:
+    """Run the guarded-clean and guarded-faulted legs and assert the guard
+    contract (see module docstring).  Each leg isolates the process-global
+    guard state so intentional injections cannot leak into other suites or
+    the runner's clean-run drift gate.
+    """
+    from repro.kernels import guard as kguard
+
+    with kguard.isolated():
+        gclean, gclean_sessions = _drive_chaos(
+            cfg, model, params, guard="shadow", **common)
+        gclean_sum = gclean.summary()
+    for ref, s in zip(clean_sessions, gclean_sessions):
+        if s.out != ref.out:
+            raise RuntimeError(
+                f"guarded clean run diverged from clean run on rid {s.rid}: "
+                f"{s.out} != {ref.out}"
+            )
+    if gclean_sum["guard_checks"] == 0:
+        raise RuntimeError("guarded clean run performed no shadow checks")
+    if gclean_sum["drift_events"] or gclean_sum["op_degradations"]:
+        raise RuntimeError(
+            "numerics guard flagged a clean run: "
+            f"{gclean_sum['drift_events']} drift event(s), "
+            f"{gclean_sum['op_degradations']} op degradation(s)"
+        )
+
+    with kguard.isolated():
+        guarded, guarded_sessions = _drive_chaos(
+            cfg, model, params, plan=_guard_fault_plan(), guard="shadow",
+            **common)
+        gsum = guarded.summary()
+        gmetrics = kguard.metrics()
+        injected = sum(
+            r.engine._injected_drift_calls for r in guarded.replicas
+        )
+    for ref, s in zip(clean_sessions, guarded_sessions):
+        if s.finish_reason == "deadline":
+            continue
+        if s.out != ref.out:
+            raise RuntimeError(
+                f"guarded faulted run diverged from clean run on rid "
+                f"{s.rid}: {s.out} != {ref.out}"
+            )
+    if injected < 1:
+        raise RuntimeError("guard fault plan injected no drift calls")
+    if gsum["drift_events"] != injected:
+        raise RuntimeError(
+            f"guard detected {gsum['drift_events']} of {injected} "
+            "injected drift call(s)"
+        )
+    if gmetrics.quarantined_ops != {"matmul", "flash_attention"}:
+        raise RuntimeError(
+            "guard quarantined "
+            f"{sorted(gmetrics.quarantined_ops)}, expected exactly "
+            "['flash_attention', 'matmul']"
+        )
+    if gsum["degradations"]:
+        raise RuntimeError(
+            "guarded run fell back to whole-engine degradation "
+            f"({gsum['degradations']}x) instead of per-op quarantine"
+        )
+    if gsum["op_revivals"] < 1:
+        raise RuntimeError(
+            "breaker never revived a quarantined op within the drive"
+        )
+    recs = list(guarded.to_records(
+        "serving_chaos", "serving_chaos_guarded", x="guarded"))
+    recs.extend(gmetrics.to_records(
+        "serving_chaos", "serving_chaos_guard", x="guarded"))
     return recs

@@ -1,9 +1,12 @@
 """Perf-over-time: fold per-commit bench artifacts into one trend report.
 
 CI's bench job stamps every run's results file as ``BENCH_<sha>.json`` (the
-first 12 hex digits of the commit).  This module aggregates a directory (or
-explicit list) of those artifacts into one series per record name — ordered
-by each run's ``created_at`` stamp — and renders the trajectory as markdown
+first 12 hex digits of the commit); tagged jobs add an uppercase infix, e.g.
+the chaos job's ``BENCH_CHAOS_<sha>.json``.  This module aggregates a
+directory (or explicit list) of those artifacts into one series per record
+name — same-sha files merge into one commit point (first file primary,
+duplicate record names deduplicated) ordered by each run's ``created_at``
+stamp — and renders the trajectory as markdown
 (for humans: first/last value, percent delta, direction-aware regression
 flag) or JSON (for plotting).  ``python -m repro.bench trend`` is the CLI:
 
@@ -22,7 +25,10 @@ from pathlib import Path
 
 from .schema import BenchResult, SchemaError
 
-_BENCH_FILE = re.compile(r"BENCH_(?P<sha>[0-9a-fA-F]{4,40})\.json$")
+#: ``BENCH_<sha>.json`` plus tagged variants like ``BENCH_CHAOS_<sha>.json``
+_BENCH_FILE = re.compile(
+    r"BENCH_(?:(?P<tag>[A-Z][A-Z0-9]*)_)?(?P<sha>[0-9a-fA-F]{4,40})\.json$"
+)
 
 #: relative change that earns a direction-aware flag in the markdown view
 FLAG_THRESHOLD = 0.10
@@ -43,12 +49,18 @@ def discover(paths) -> list:
 def load_commits(files) -> list:
     """``[(sha, BenchResult)]`` ordered by run timestamp (then sha).
 
-    The sha comes from the ``BENCH_<sha>.json`` filename; a file named
-    otherwise keeps its stem, so ad-hoc results can join a trend.  Files
-    that fail schema validation raise — a trend over silently-dropped
-    commits would misreport where a regression landed.
+    The sha comes from the ``BENCH_<sha>.json`` / ``BENCH_<TAG>_<sha>.json``
+    filename; a file named otherwise keeps its stem, so ad-hoc results can
+    join a trend.  Multiple files for one sha (the main bench artifact plus
+    tagged job artifacts like ``BENCH_CHAOS_<sha>.json``) merge into a
+    single commit entry: the first file is primary and later files
+    contribute only record names it does not already carry (jobs overlap on
+    shared quick suites).  Files that fail schema validation raise — a
+    trend over silently-dropped commits would misreport where a regression
+    landed.
     """
     commits = []
+    by_sha: dict = {}
     for f in files:
         f = Path(f)
         try:
@@ -57,7 +69,15 @@ def load_commits(files) -> list:
             raise SchemaError(f"{f}: {e}") from None
         m = _BENCH_FILE.search(f.name)
         sha = m.group("sha") if m else f.stem
-        commits.append((sha, result))
+        primary = by_sha.get(sha)
+        if primary is None:
+            by_sha[sha] = result
+            commits.append((sha, result))
+        else:
+            seen = {r.name for r in primary.records}
+            primary.records.extend(
+                r for r in result.records if r.name not in seen
+            )
     commits.sort(key=lambda c: (c[1].created_at, c[0]))
     return commits
 

@@ -29,6 +29,13 @@ reproduction that axis as a first-class API:
   ``choose_attention_chunk``, ``choose_ssm_chunk``) and memoized in the
   persisted :class:`repro.core.tuning.TuningCache` keyed on
   ``(op, shapes, dtype, backend)``.
+
+- With ``guard="sample"`` or ``guard="shadow"``, eager calls are verified by
+  :mod:`repro.kernels.guard`: a seed-deterministic sample (or every call)
+  re-executes on the ``xla`` oracle and compares under the per-dtype
+  tolerance ladder; drifting or faulting ops are quarantined to the oracle
+  per-op with breaker-style cooldown.  ``op.bound()`` stays guard-free by
+  design — timing loops measure the native path only.
 """
 from __future__ import annotations
 
@@ -50,8 +57,11 @@ from repro.core.autotune import (
     dtype_name,
 )
 
+import numpy as np
+
 from . import axpy as _axpy
 from . import flash_attention as _fa
+from . import guard as _guard
 from . import matmul as _mm
 from . import membw as _bw
 from . import pchase as _pc
@@ -83,12 +93,15 @@ class KernelPolicy:
 
     ``backend`` of None defers to :func:`default_backend`; ``tiles`` maps op
     name -> tile-kwarg overrides (e.g. ``{"matmul": {"bm": 256}}``) and is
-    merged across nested policies.
+    merged across nested policies.  ``guard`` of None inherits (defaulting to
+    ``"off"`` at the root); ``"sample"``/``"shadow"`` enable runtime
+    verification via :mod:`repro.kernels.guard`.
     """
 
     backend: Optional[str] = None
     autotune: bool = False
     tiles: dict = field(default_factory=dict)
+    guard: Optional[str] = None
 
 
 _POLICY: ContextVar[KernelPolicy] = ContextVar("kernel_policy", default=KernelPolicy())
@@ -100,11 +113,15 @@ def current_policy() -> KernelPolicy:
 
 @contextmanager
 def kernel_policy(backend: Optional[str] = None, autotune: Optional[bool] = None,
-                  tiles: Optional[dict] = None):
+                  tiles: Optional[dict] = None, guard: Optional[str] = None):
     """Scoped policy override; unspecified fields inherit from the enclosing
     policy, and the previous policy is restored on exit (exception-safe)."""
     if backend is not None and backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    if guard is not None and guard not in _guard.GUARD_MODES:
+        raise ValueError(
+            f"unknown guard mode {guard!r}; expected one of {_guard.GUARD_MODES}"
+        )
     outer = _POLICY.get()
     merged_tiles = dict(outer.tiles)
     for op_name, ov in (tiles or {}).items():
@@ -123,6 +140,7 @@ def kernel_policy(backend: Optional[str] = None, autotune: Optional[bool] = None
         backend=outer.backend if backend is None else backend,
         autotune=outer.autotune if autotune is None else autotune,
         tiles=merged_tiles,
+        guard=outer.guard if guard is None else guard,
     )
     token = _POLICY.set(pol)
     try:
@@ -232,7 +250,22 @@ class KernelOp:
         return partial(impl, **kwargs)
 
     def __call__(self, *args, backend: Optional[str] = None, **kwargs):
-        return self.bound(*args, backend=backend, **kwargs)(*args)
+        pol = current_policy()
+        mode = pol.guard
+        if mode is None or mode == "off":
+            return self.bound(*args, backend=backend, **kwargs)(*args)
+        be = backend or pol.backend or default_backend()
+        if be not in _PALLAS_LIKE or "xla" not in self._impls or _guard.tracing(args):
+            # nothing to shadow against (xla already *is* the oracle, or the
+            # op has no oracle binding), or we are inside a jit trace where
+            # concrete comparison is impossible — quarantine routing still
+            # applies so traced closures re-read breaker state when re-jitted
+            if (be in _PALLAS_LIKE and "xla" in self._impls
+                    and _guard.is_quarantined(self.name)):
+                _guard.state().metrics.degraded_calls += 1
+                be = "xla"
+            return self.bound(*args, backend=be, **kwargs)(*args)
+        return _guard.state().guarded_call(self, args, kwargs, be, mode)
 
     def __repr__(self) -> str:
         return f"KernelOp({self.name!r}, backends={sorted(self._impls)})"
@@ -442,6 +475,44 @@ def ssm_scan(u, a_log, b, c, *, chunk=256, interpret=True):
 def _ssm_scan_xla(u, a_log, b, c):
     y = ref.ssm_scan_ref(*flatten_ssm(u, a_log, b, c))
     return unflatten_heads(y, u.shape[0])
+
+
+# ---------------------------------------------------------------------------
+# guard hooks: saturation sentinels + canonical probe inputs.  The sentinel
+# fns live beside their kernels (matmul/flash_attention own the accumulation
+# semantics); registration lives here so guard.py never imports kernels.
+# ---------------------------------------------------------------------------
+_guard.register_sentinel("matmul", _mm.saturation_check)
+_guard.register_sentinel("flash_attention", _fa.saturation_check)
+
+
+def _matmul_probe():
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((16, 16)).astype(np.float32)
+    b = rng.standard_normal((16, 16)).astype(np.float32)
+    return (a, b), {}
+
+
+def _flash_attention_probe():
+    rng = np.random.default_rng(0)
+    shape = (1, 16, 2, 8)  # (B, S, H, hd)
+    q = rng.standard_normal(shape).astype(np.float32)
+    k = rng.standard_normal(shape).astype(np.float32)
+    v = rng.standard_normal(shape).astype(np.float32)
+    return (q, k, v), {}
+
+
+def _axpy_probe():
+    # (8, 512): divisible by axpy's default (block_rows, block_cols) tiles
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((8, 512)).astype(np.float32)
+    y = rng.standard_normal((8, 512)).astype(np.float32)
+    return (x, y, 1.5), {}
+
+
+_guard.register_probe("matmul", _matmul_probe)
+_guard.register_probe("flash_attention", _flash_attention_probe)
+_guard.register_probe("axpy", _axpy_probe)
 
 
 __all__ = [

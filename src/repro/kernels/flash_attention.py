@@ -13,10 +13,37 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+
+#: |out| within this factor of finfo.max counts as saturated for fp16/bf16
+_SATURATION_MARGIN = 0.99
+
+
+def saturation_check(args, out):
+    """Guard sentinel: saturated fraction of the attention output (see
+    ``repro.kernels.guard``).
+
+    The softmax weights are bounded in [0, 1], so the output is a convex
+    combination of v rows — saturation can only come from the accumulation
+    itself: non-finite entries (an overflowed qk^T row poisons the whole
+    softmax) or, for the narrow fp16/bf16 dtypes, magnitudes pinned near
+    ``finfo.max``.
+    """
+    o = np.asarray(out)
+    if o.size == 0:
+        return 0.0, "empty output"
+    of = o.astype(np.float64)
+    bad = ~np.isfinite(of)
+    detail = "non-finite entries"
+    if o.dtype in (np.dtype(np.float16), np.dtype(jnp.bfloat16)):
+        limit = _SATURATION_MARGIN * float(jnp.finfo(o.dtype).max)
+        bad |= np.abs(of) >= limit
+        detail = f"non-finite or |out| >= {_SATURATION_MARGIN:g}*finfo.max"
+    return float(np.mean(bad)), detail
 
 
 def _flash_kernel(

@@ -11,8 +11,48 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+#: |out| within this factor of finfo.max counts as saturated for float dtypes
+_SATURATION_MARGIN = 0.99
+
+
+def saturation_check(args, out):
+    """Guard sentinel: fraction of the matmul output lost to overflow or
+    saturation, plus a human-readable detail (see ``repro.kernels.guard``).
+
+    Integer outputs need the bound computed from the *inputs*: a low-precision
+    accumulate that overflows int8/int16 range wraps silently on cast, so
+    inspecting ``out`` alone has false negatives.  ``|a| @ |b|`` in int64 is a
+    triangle-inequality upper bound — every entry it clears is provably safe,
+    every entry past the dtype max is counted saturated (conservative, zero
+    false negatives).  Float outputs saturate visibly: count non-finite
+    entries plus magnitudes within ``_SATURATION_MARGIN`` of ``finfo.max``
+    for the narrow dtypes (fp16/bf16); fp32+ counts non-finite only.
+    """
+    o = np.asarray(out)
+    if o.size == 0:
+        return 0.0, "empty output"
+    if np.issubdtype(o.dtype, np.integer):
+        a = np.abs(np.asarray(args[0]).astype(np.int64))
+        b = np.abs(np.asarray(args[1]).astype(np.int64))
+        bound = a @ b
+        limit = np.iinfo(o.dtype).max
+        frac = float(np.mean(bound > limit))
+        return frac, (
+            f"|a|@|b| accumulation bound exceeds {o.dtype} max ({limit}) on "
+            f"{frac:.1%} of entries"
+        )
+    of = o.astype(np.float64)
+    bad = ~np.isfinite(of)
+    detail = "non-finite entries"
+    if o.dtype in (np.dtype(np.float16), np.dtype(jnp.bfloat16)):
+        limit = _SATURATION_MARGIN * float(jnp.finfo(o.dtype).max)
+        bad |= np.abs(of) >= limit
+        detail = f"non-finite or |out| >= {_SATURATION_MARGIN:g}*finfo.max"
+    return float(np.mean(bad)), detail
 
 
 def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref):

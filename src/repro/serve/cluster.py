@@ -481,9 +481,15 @@ class ClusterRouter:
                     r.engine.step()
                     r.work_ticks += 1
                     # skip the replica's first few working steps: jit-compile
-                    # spikes there would read as a throttle signature
+                    # spikes there would read as a throttle signature.  Same
+                    # for mid-run re-traces (op quarantine/revival, backend
+                    # degradation) and for replicas with ops quarantined to
+                    # the oracle — their step times are not fleet-comparable
+                    # and would skew the throttle median both ways.
                     if (self.detector is not None
-                            and r.work_ticks > h.warmup_ticks):
+                            and r.work_ticks > h.warmup_ticks
+                            and not r.engine.last_step_recompiled
+                            and not r.engine.op_quarantined):
                         self.detector.observe(r.name, r.engine.last_step_s)
             except ReplicaCrashed:
                 if h is None:

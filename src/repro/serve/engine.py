@@ -43,10 +43,13 @@ partial output), every re-queue of drained/preempted/quarantined work goes
 through the budgeted :meth:`ServeEngine.requeue` (exponential backoff, typed
 :class:`RetryBudgetExceeded`), non-finite logits quarantine the lane and
 retry the session (token-exact: the poisoned token is never recorded), and a
-compiled-step failure on the pallas path falls back once to the ``xla``
-backend (``EngineConfig.degrade``).  The ``crashed`` / ``step_time_scale``
-attributes are the deterministic fault-injection surface of
-``repro.serve.faults``.
+compiled-step failure on the pallas path is attributed to a kernel op by the
+numerics guard first (``EngineConfig.guard`` — per-op quarantine to the xla
+oracle, breaker-style cooldown/revival, shadow-oracle drift checks of the
+compiled steps; docs/robustness.md#numerics-guard), falling back to the
+whole-engine one-shot ``xla`` degrade (``EngineConfig.degrade``) only when no
+op is implicated.  The ``crashed`` / ``step_time_scale`` attributes are the
+deterministic fault-injection surface of ``repro.serve.faults``.
 """
 from __future__ import annotations
 
@@ -60,7 +63,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.dist.sharding import activation_sharding, param_specs
-from repro.kernels.api import BACKENDS, kernel_policy
+from repro.kernels import guard as kguard
+from repro.kernels.api import BACKENDS, current_policy, kernel_policy
 from repro.models.api import ModelApi
 
 from .metrics import EngineMetrics
@@ -188,6 +192,19 @@ class EngineConfig:
     - ``degrade`` — on a compiled-step failure under a pallas-like backend,
       fall back once to the ``xla`` backend (token-identical) instead of
       failing the whole engine; a second failure re-raises.
+    - ``guard`` — numerics-guard mode for the compiled steps (see
+      docs/robustness.md#numerics-guard): ``None`` inherits the ambient
+      ``kernel_policy`` guard, ``"off"`` disables, ``"sample"`` shadow-checks
+      every ``guard_sample``-th compiled-step output against an xla twin,
+      ``"shadow"`` checks every one.  A drifting step attributes to a kernel
+      op via ``repro.kernels.guard`` and quarantines *that op* to the oracle
+      (whole-engine ``degrade`` stays the fallback when attribution fails);
+      the drifting tick is served from the shadow output, keeping the token
+      stream exact.
+    - ``guard_sample`` — compiled-step sampling stride under
+      ``guard="sample"``.
+    - ``guard_cooldown`` — engine ticks a quarantined op waits before its
+      half-open re-probe (doubling per consecutive failure, capped at 16x).
     """
 
     n_slots: int
@@ -208,6 +225,9 @@ class EngineConfig:
     quarantine_ticks: int = 4  # lane bench time after a NaN-guard trip
     nan_guard: bool = True  # quarantine lanes with non-finite logits
     degrade: bool = True  # pallas step failure -> one-shot xla fallback
+    guard: Optional[str] = None  # numerics-guard mode (None: ambient policy)
+    guard_sample: int = 8  # shadow-check stride under guard="sample"
+    guard_cooldown: int = 8  # ticks before a quarantined op re-probes
 
     def __post_init__(self):
         if self.retry_budget < 1:
@@ -224,6 +244,14 @@ class EngineConfig:
             raise ValueError("prefill_chunk must be >= 1")
         if self.backend is not None and self.backend not in BACKENDS:
             raise ValueError(f"unknown backend {self.backend!r}; expected {BACKENDS}")
+        if self.guard is not None and self.guard not in kguard.GUARD_MODES:
+            raise ValueError(
+                f"unknown guard mode {self.guard!r}; expected {kguard.GUARD_MODES}"
+            )
+        if self.guard_sample < 1:
+            raise ValueError("guard_sample must be >= 1")
+        if self.guard_cooldown < 1:
+            raise ValueError("guard_cooldown must be >= 1 tick")
         if self.page_size is not None and self.page_size < 1:
             raise ValueError("page_size must be >= 1")
         if self.n_pages is not None:
@@ -293,6 +321,11 @@ class ServeEngine:
         # -- robustness state (docs/robustness.md) -------------------------
         self.tick = 0  # monotonically increasing step counter
         self.last_step_s = 0.0  # scaled duration of the most recent step()
+        # the most recent step() re-traced its compiled fns (quarantine,
+        # revival, degradation): health monitors must not score the compile
+        # spike as a throttle signature
+        self.last_step_recompiled = False
+        self._recompiled = False
         # fault-injection surface (repro.serve.faults flips these):
         self.crashed = False  # step() raises ReplicaCrashed while set
         self.step_time_scale = 1.0  # virtual dilation of reported step times
@@ -301,6 +334,20 @@ class ServeEngine:
         # hardening state:
         self._degraded = False  # compiled steps fell back to the xla backend
         self._quarantined: dict = {}  # lane -> first tick it is usable again
+        # numerics-guard state (docs/robustness.md#numerics-guard); the mode
+        # must resolve before the _jit_scoped calls below so the compiled
+        # steps trace with the guard in their kernel policy
+        self._guard_mode = (config.guard if config.guard is not None
+                            else (current_policy().guard or "off"))
+        self._shadow_decode = None  # lazy xla twins of the compiled steps
+        self._shadow_chunk = None
+        self._guard_calls = 0  # compiled-step counter (sampling stride)
+        self._op_quarantine: dict = {}  # op -> {"since": tick, "fails": n}
+        self._nan_attr_tick = -1  # last tick NaN attribution ran (once/tick)
+        # fault surface (repro.serve.faults): seeded logits perturbation
+        # standing in for a drifting kernel inside the compiled step
+        self._inject_drift: Optional[dict] = None  # {"op","scale","rng"}
+        self._injected_drift_calls = 0
         if self.paged:
             ps = config.page_size
             self._table_width = config.table_width
@@ -355,12 +402,18 @@ class ServeEngine:
         path re-jits the steps with ``backend="xla"`` after a pallas failure.
         """
         backend = self.cfg.backend if backend is None else backend
-        if backend is None and self.cfg.autotune is None and self.mesh is None:
+        guard = self._guard_mode if self._guard_mode != "off" else None
+        if (backend is None and self.cfg.autotune is None and self.mesh is None
+                and guard is None):
             return jax.jit(fn)
         autotune, mesh = self.cfg.autotune, self.mesh
 
         def scoped(*args):  # fresh object per engine -> own trace cache
-            with kernel_policy(backend=backend, autotune=autotune):
+            # this body only runs at trace time (cache miss), so it doubles
+            # as the compile-spike marker health monitors use to skip the
+            # step's duration (see ``last_step_recompiled``)
+            self._recompiled = True
+            with kernel_policy(backend=backend, autotune=autotune, guard=guard):
                 if mesh is None:
                     return fn(*args)
                 with activation_sharding(mesh):
@@ -377,20 +430,38 @@ class ServeEngine:
             return "xla"
         return self.cfg.backend if self.cfg.backend is not None else "pallas"
 
+    @property
+    def op_quarantined(self) -> bool:
+        """Any kernel op currently quarantined to the oracle backend.  Step
+        times are not fleet-comparable while set (part of the engine runs on
+        a different backend), so health monitors exclude the replica from
+        throttle-signature statistics."""
+        return bool(self._op_quarantine)
+
+    def _rejit_steps(self, backend: Optional[str] = None) -> None:
+        """Re-jit both compiled steps (per-op quarantine / revival / whole-
+        engine degradation all change what a fresh trace dispatches to); the
+        lazy shadow twins rebuild on next use."""
+        self._recompiled = True
+        if self.paged:
+            self._decode = self._jit_scoped(self.model.decode_step_paged, backend=backend)
+            self._chunk = self._jit_scoped(self.model.decode_chunk_paged, backend=backend)
+        else:
+            self._decode = self._jit_scoped(self.model.decode_step, backend=backend)
+            self._chunk = self._jit_scoped(self.model.decode_chunk, backend=backend)
+        self._shadow_decode = self._shadow_chunk = None
+
     def _degrade(self, err: Exception) -> None:
-        """One-shot fallback: re-jit decode/prefill on the ``xla`` backend.
+        """Whole-engine fallback: re-jit decode/prefill on the ``xla``
+        backend.  With the numerics guard on this is the *second* line of
+        defense — per-op attribution runs first (:meth:`_guard_attribute`).
 
         Backend parity (the kernels' correctness contract) makes the
         degraded engine token-identical — only kernel dispatch changes, so
         in-flight lanes continue from the same cache without replay."""
         self._degraded = True
         self.metrics.record_degradation()
-        if self.paged:
-            self._decode = self._jit_scoped(self.model.decode_step_paged, backend="xla")
-            self._chunk = self._jit_scoped(self.model.decode_chunk_paged, backend="xla")
-        else:
-            self._decode = self._jit_scoped(self.model.decode_step, backend="xla")
-            self._chunk = self._jit_scoped(self.model.decode_chunk, backend="xla")
+        self._rejit_steps(backend="xla")
         warnings.warn(
             f"serving engine degraded to the xla backend after a compiled-step "
             f"failure: {err!r}",
@@ -398,23 +469,148 @@ class ServeEngine:
             stacklevel=4,
         )
 
-    def _call_compiled(self, which: str, *args):
-        """Run a compiled step with the degradation guard around it.
+    # -- numerics guard (docs/robustness.md#numerics-guard) -------------
+    def _op_suppressed(self, err: Exception) -> bool:
+        """An injected step error attributed to an op stops firing once that
+        op is quarantined — the retried step runs with the op on the oracle."""
+        op = getattr(err, "op", None)
+        return op is not None and kguard.is_quarantined(op)
 
-        A failure under a pallas-like backend triggers :meth:`_degrade` and
-        retries the same arguments once through the xla-traced step; a
-        failure while already on xla (or with ``degrade=False``) re-raises.
+    def _perturb(self, out):
+        """Apply an injected ``kernel_drift`` fault: seeded additive noise on
+        the step's logits, standing in for a drifting kernel inside the
+        compiled step.  Quarantining the named op (which routes it to the
+        oracle) ends the perturbation, like a real per-op degrade would."""
+        inj = self._inject_drift
+        if (inj is None or self._backend() == "xla"
+                or kguard.is_quarantined(inj["op"])):
+            return out
+        logits = out[0]
+        arr = np.asarray(logits).astype(np.float64)
+        noise = inj["rng"].standard_normal(arr.shape)
+        scale = inj["scale"] * (float(np.mean(np.abs(arr))) + 1.0)
+        self._injected_drift_calls += 1
+        perturbed = jnp.asarray(arr + noise * scale, dtype=logits.dtype)
+        return (perturbed,) + tuple(out[1:])
+
+    def _guard_attribute(self, err: Exception) -> bool:
+        """Attribute a step failure/drift to specific kernel ops via the
+        guard's canonical probes; quarantined ops re-jit the steps so fresh
+        traces route them to the oracle.  False means no op was implicated
+        (the caller falls back to whole-engine handling)."""
+        if self._guard_mode == "off":
+            return False
+        bad = kguard.attribute()
+        hinted = getattr(err, "op", None)
+        if (hinted is not None and hinted not in bad
+                and not kguard.is_quarantined(hinted)):
+            kguard.quarantine(hinted, f"engine attribution: {err!r}")
+            bad.append(hinted)
+        if not bad:
+            return False
+        for op in bad:
+            rec = self._op_quarantine.setdefault(op, {"since": self.tick, "fails": 0})
+            rec["since"] = self.tick
+            rec["fails"] += 1
+        self.metrics.record_op_degradation(len(bad))
+        warnings.warn(
+            f"numerics guard quarantined kernel op(s) {sorted(bad)} to the "
+            f"xla backend (engine stays on {self._backend()!r}): {err!r}",
+            RuntimeWarning,
+            stacklevel=5,
+        )
+        self._rejit_steps()
+        return True
+
+    def _heal_ops(self) -> None:
+        """Half-open re-probe for quarantined ops whose cooldown elapsed:
+        a clean canonical probe revives the op (next traces dispatch native
+        again); a dirty one doubles the cooldown."""
+        healed = False
+        for op, rec in list(self._op_quarantine.items()):
+            wait = self.cfg.guard_cooldown * 2 ** min(rec["fails"] - 1, 4)
+            if self.tick - rec["since"] < wait:
+                continue
+            if kguard.probe(op):
+                kguard.revive(op)
+                del self._op_quarantine[op]
+                self.metrics.record_op_revival()
+                healed = True
+            else:
+                rec["since"] = self.tick
+                rec["fails"] += 1
+        if healed:
+            self._rejit_steps()
+
+    def _shadow_fn(self, which: str) -> Callable:
+        """Lazy xla-backed twin of a compiled step (the shadow oracle)."""
+        if which == "decode":
+            if self._shadow_decode is None:
+                fn = self.model.decode_step_paged if self.paged else self.model.decode_step
+                self._shadow_decode = self._jit_scoped(fn, backend="xla")
+            return self._shadow_decode
+        if self._shadow_chunk is None:
+            fn = self.model.decode_chunk_paged if self.paged else self.model.decode_chunk
+            self._shadow_chunk = self._jit_scoped(fn, backend="xla")
+        return self._shadow_chunk
+
+    def _guard_verify(self, which: str, args: tuple, out):
+        """Shadow-oracle check of a compiled-step output: re-run the same
+        arguments through the xla twin and compare under the per-dtype
+        tolerance ladder.  On drift, attribute to a kernel op (falling back
+        to whole-engine degrade) and serve the *shadow* output for this tick
+        — the token stream stays exact while the quarantine takes effect."""
+        if self._guard_mode == "off" or self._backend() == "xla":
+            return out
+        self._guard_calls += 1
+        due = (self._guard_mode == "shadow"
+               or self._guard_calls % self.cfg.guard_sample == 0)
+        if not due:
+            return out
+        shadow = self._shadow_fn(which)(*args)
+        self.metrics.record_guard_check()
+        ok, detail = kguard.trees_match(out, shadow)
+        if ok:
+            return out
+        self.metrics.record_drift_event()
+        err = RuntimeError(
+            f"compiled {which} step drifted from its xla shadow: {detail}"
+        )
+        if not self._guard_attribute(err):
+            if self.cfg.degrade:
+                self._degrade(err)
+            else:
+                raise err
+        return shadow
+
+    def _call_compiled(self, which: str, *args):
+        """Run a compiled step with the guard and degradation boundaries
+        around it.
+
+        A failure attributes to a kernel op first (per-op quarantine + retry
+        with the op on the oracle); only when attribution finds nothing does
+        the whole-engine :meth:`_degrade` fallback fire (or the failure
+        re-raise, with ``degrade=False`` or already on xla).  Successful
+        outputs pass through the shadow-oracle check of
+        :meth:`_guard_verify`.
         """
         while True:
             fn = self._decode if which == "decode" else self._chunk
             try:
-                if self._inject_step_error is not None and self._backend() != "xla":
-                    raise self._inject_step_error
-                return fn(*args)
-            except Exception as err:  # degradation boundary: any step failure
+                inj = self._inject_step_error
+                if (inj is not None and self._backend() != "xla"
+                        and not self._op_suppressed(inj)):
+                    raise inj
+                out = fn(*args)
+                out = self._perturb(out)
+            except Exception as err:  # guard/degradation boundary
+                if self._guard_attribute(err):
+                    continue  # op quarantined + steps re-jitted: retry
                 if not self.cfg.degrade or self._backend() == "xla":
                     raise
                 self._degrade(err)
+                continue
+            return self._guard_verify(which, args, out)
 
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int, *, priority: int = 0,
@@ -782,6 +978,11 @@ class ServeEngine:
             for lane, s, feed in ending:
                 row = logits[lane, spans[lane] - 1 - c * chunk]
                 if self.cfg.nan_guard and not bool(jnp.all(jnp.isfinite(row))):
+                    if self._nan_attr_tick != self.tick:
+                        self._nan_attr_tick = self.tick
+                        self._guard_attribute(
+                            RuntimeError(f"non-finite prefill logits on lane {lane}")
+                        )
                     self._quarantine_lane(lane, s)  # retry the session whole
                     continue
                 tok = int(self.cfg.sampler(row))
@@ -814,6 +1015,8 @@ class ServeEngine:
             )
         t_step0 = time.perf_counter()
         self.tick += 1
+        if self._op_quarantine:  # quarantined kernel ops due for a re-probe
+            self._heal_ops()
         if self._quarantined:  # lanes whose bench time has elapsed come back
             self._quarantined = {
                 lane: t for lane, t in self._quarantined.items() if t > self.tick
@@ -830,6 +1033,7 @@ class ServeEngine:
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             self.last_step_s = (time.perf_counter() - t_step0) * self.step_time_scale
+            self.last_step_recompiled, self._recompiled = self._recompiled, False
             return
         t0 = time.perf_counter()
         bt_args = (jnp.asarray(self._bt),) if self.paged else ()
@@ -844,6 +1048,13 @@ class ServeEngine:
         if self.cfg.nan_guard:
             finite = np.asarray(jnp.all(jnp.isfinite(logits), axis=-1))
             bad = [i for i in active if not finite[i]]
+        if bad and self._nan_attr_tick != self.tick:
+            # a kernel op emitting non-finite values shows up in its probe:
+            # quarantine it per-op (the lanes still retry below either way)
+            self._nan_attr_tick = self.tick
+            self._guard_attribute(
+                RuntimeError(f"non-finite decode logits on lane(s) {bad}")
+            )
         next_tok = self.cfg.sampler(logits)
         jax.block_until_ready(next_tok)
         t_decode = time.perf_counter() - t0
@@ -875,6 +1086,7 @@ class ServeEngine:
         if self.paged:
             self.metrics.record_pages(self.allocator.used)
         self.last_step_s = (time.perf_counter() - t_step0) * scale
+        self.last_step_recompiled, self._recompiled = self._recompiled, False
 
     # ------------------------------------------------------------------
     def has_work(self) -> bool:
@@ -956,3 +1168,5 @@ class ServeEngine:
         compilation stays out of the measured TTFT/latency records."""
         self.metrics = EngineMetrics(self.cfg.n_slots, n_pages=self.n_pages)
         self.finished = []
+        self._guard_calls = 0
+        self._injected_drift_calls = 0

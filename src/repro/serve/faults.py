@@ -23,8 +23,18 @@ kind                  effect while active
                       the cluster's ``StragglerDetector`` flags; no real
                       sleeping, so chaos runs stay fast and deterministic
 ``kernel_fault``      the next compiled step raises (simulated pallas
-                      lowering/runtime failure) — the engine degrades once
-                      to the ``xla`` backend and continues token-identical
+                      lowering/runtime failure) — with ``op`` set the error
+                      carries the kernel op's name and the numerics guard
+                      quarantines *that op* to the oracle; without it the
+                      engine degrades once to the ``xla`` backend; either
+                      way serving continues token-identical
+``kernel_drift``      the named ``op`` (default ``"matmul"``) starts
+                      returning plausible-but-wrong values: seeded additive
+                      noise of relative scale ``drift_scale`` perturbs the
+                      replica's step logits, and the guard's global
+                      injection surface perturbs the op's eager calls — the
+                      shadow-oracle check detects it, attribution
+                      quarantines the op, and output stays token-exact
 ``nan_logits``        the listed lanes' decode logits are poisoned with NaN
                       — the NaN guard quarantines the lane and retries the
                       session token-exact
@@ -32,6 +42,10 @@ kind                  effect while active
                       (held, then returned at expiry) — admission waits and
                       recompute preemption fire under real pressure
 ====================  =====================================================
+
+One caveat: the ``kernel_drift``/op-targeted injections flow through
+``repro.kernels.guard``'s process-global state, so they are global across
+replicas (the per-replica logits perturbation still honours ``replica``).
 
 The injector never reaches into compiled code: every fault is a host-side
 flag the hardened engine already honours, so injection composes with any
@@ -45,6 +59,7 @@ from typing import Optional, Sequence, Union
 import numpy as np
 
 from repro.core.throttle import V5E_THROTTLE, ThrottleParams, slowdown_factor
+from repro.kernels import guard as kguard
 
 from .cluster import ClusterRouter
 from .engine import ReplicaCrashed, ServeEngine
@@ -53,9 +68,15 @@ from .engine import ReplicaCrashed, ServeEngine
 CRASH = "crash"
 STRAGGLER = "straggler"
 KERNEL_FAULT = "kernel_fault"
+KERNEL_DRIFT = "kernel_drift"
 NAN_LOGITS = "nan_logits"
 PAGE_PRESSURE = "page_pressure"
-KINDS = (CRASH, STRAGGLER, KERNEL_FAULT, NAN_LOGITS, PAGE_PRESSURE)
+KINDS = (CRASH, STRAGGLER, KERNEL_FAULT, KERNEL_DRIFT, NAN_LOGITS, PAGE_PRESSURE)
+#: default draw set for :meth:`FaultPlan.random` — ``kernel_drift`` is
+#: opt-in (pass ``kinds=KINDS``): undetected drift on a guard-off engine
+#: corrupts tokens by design, which random chaos on arbitrary targets
+#: (e.g. the serve driver's --chaos) must not do
+RANDOM_KINDS = (CRASH, STRAGGLER, KERNEL_FAULT, NAN_LOGITS, PAGE_PRESSURE)
 
 
 @dataclass(frozen=True)
@@ -66,7 +87,10 @@ class Fault:
     ``factor`` (straggler) defaults to the throttle-signature slowdown;
     ``lanes`` (nan_logits) are the poisoned slot indices; ``pages``
     (page_pressure) is how many free pages to steal (clamped to what the
-    pool has); ``message`` (kernel_fault) is the simulated error text.
+    pool has); ``message`` (kernel_fault) is the simulated error text;
+    ``op`` names the kernel op a kernel_fault/kernel_drift targets
+    (kernel_drift defaults to ``"matmul"``) and ``drift_scale`` is the
+    relative magnitude of the injected drift noise.
     """
 
     tick: int
@@ -77,6 +101,8 @@ class Fault:
     lanes: tuple = (0,)
     pages: int = 1
     message: str = "injected pallas kernel fault"
+    op: Optional[str] = None  # kernel op targeted by kernel_fault/kernel_drift
+    drift_scale: float = 0.05  # relative noise magnitude for kernel_drift
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -91,6 +117,10 @@ class Fault:
             raise ValueError("straggler factor must be > 1.0")
         if self.pages < 1:
             raise ValueError("page_pressure pages must be >= 1")
+        if self.drift_scale <= 0:
+            raise ValueError("drift_scale must be > 0")
+        if self.kind == KERNEL_DRIFT and self.op is None:
+            object.__setattr__(self, "op", "matmul")
 
 
 @dataclass(frozen=True)
@@ -105,7 +135,7 @@ class FaultPlan:
 
     @classmethod
     def random(cls, seed: int, *, n_ticks: int = 32, n_faults: int = 4,
-               n_replicas: int = 1, kinds: Sequence[str] = KINDS,
+               n_replicas: int = 1, kinds: Sequence[str] = RANDOM_KINDS,
                max_duration: int = 4) -> "FaultPlan":
         """Seed-deterministic plan: ``n_faults`` draws over ``kinds`` with
         ticks in ``[1, n_ticks)`` — the same seed always yields the same
@@ -159,6 +189,10 @@ class FaultInjector:
         self.skipped = 0  # faults that could not apply (e.g. pages on dense)
         self.crash_ticks = 0  # ticks the target refused to step
         self._active: list = []  # (expire_tick, fault, held_pages|None)
+        self._drift_rngs: dict = {}  # id(fault) -> rng for its logits noise
+        # kernel-op injections mirrored into the process-global guard state
+        self._guard_drift_ops: set = set()
+        self._guard_fault_ops: set = set()
         if any(f.replica >= self._n_replicas() for f in plan.faults):
             raise ValueError(
                 f"plan targets replica >= {self._n_replicas()} but the "
@@ -195,13 +229,43 @@ class FaultInjector:
             eng.step_time_scale = max(factors) if factors else 1.0
             errs = [f for f in active
                     if f.kind == KERNEL_FAULT and f.replica == idx]
-            eng._inject_step_error = (
-                RuntimeError(errs[-1].message) if errs else None
-            )
+            err = RuntimeError(errs[-1].message) if errs else None
+            if err is not None and errs[-1].op is not None:
+                err.op = errs[-1].op  # attribution hint for the guard
+            eng._inject_step_error = err
             eng._inject_nan_lanes = {
                 lane for f in active if f.kind == NAN_LOGITS
                 and f.replica == idx for lane in f.lanes
             }
+            drifts = [f for f in active
+                      if f.kind == KERNEL_DRIFT and f.replica == idx]
+            eng._inject_drift = (
+                {
+                    "op": drifts[-1].op,
+                    "scale": drifts[-1].drift_scale,
+                    "rng": self._drift_rngs[id(drifts[-1])],
+                }
+                if drifts else None
+            )
+        # mirror op-targeted injections into the guard's global state so
+        # eager guarded calls and attribution probes see them too (global
+        # across replicas — see the module docstring caveat)
+        drift_ops = {f.op for f in active if f.kind == KERNEL_DRIFT}
+        fault_ops = {f.op for f in active if f.kind == KERNEL_FAULT
+                     and f.op is not None}
+        for op in drift_ops - self._guard_drift_ops:
+            f = next(f for f in active if f.kind == KERNEL_DRIFT and f.op == op)
+            kguard.inject_drift(op, scale=f.drift_scale,
+                                seed=(self.plan.seed or 0) * 7919 + f.tick)
+        for op in self._guard_drift_ops - drift_ops:
+            kguard.clear_drift(op)
+        for op in fault_ops - self._guard_fault_ops:
+            f = next(f for f in active if f.kind == KERNEL_FAULT and f.op == op)
+            kguard.inject_fault(op, f.message)
+        for op in self._guard_fault_ops - fault_ops:
+            kguard.clear_fault(op)
+        self._guard_drift_ops = drift_ops
+        self._guard_fault_ops = fault_ops
 
     def _apply(self, fault: Fault) -> None:
         engines = self._engines()
@@ -217,6 +281,11 @@ class FaultInjector:
             held = eng.allocator.alloc(
                 min(fault.pages, eng.allocator.free_pages)
             )
+        if fault.kind == KERNEL_DRIFT:
+            # seeded per-fault rng: the same plan replays the same noise
+            self._drift_rngs[id(fault)] = np.random.default_rng(
+                (self.plan.seed or 0) * 7919 + fault.tick
+            )
         self.counts[fault.kind] += 1
         self._active.append((self.tick + fault.duration, fault, held))
         self._sync()
@@ -230,6 +299,7 @@ class FaultInjector:
         for _, fault, held in due:
             if held:  # return stolen pages to the pool
                 engines[fault.replica].allocator.free(held)
+            self._drift_rngs.pop(id(fault), None)
         self._sync()
 
     def expire_all(self) -> None:

@@ -59,6 +59,11 @@ class EngineMetrics:
         self.nan_events = 0  # decode/prefill rows that failed the NaN guard
         self.degradations = 0  # pallas -> xla backend fallbacks
         self.tick_budget_exhausted = 0  # run() returns with work still pending
+        # numerics-guard counters (docs/robustness.md#numerics-guard)
+        self.guard_checks = 0  # compiled-step outputs shadow-checked
+        self.drift_events = 0  # shadow checks that failed the tolerance ladder
+        self.op_degradations = 0  # kernel ops quarantined to the oracle
+        self.op_revivals = 0  # quarantined ops re-probed clean and revived
 
     # -- engine hooks ------------------------------------------------------
     def record_tick(self, seconds: float, decode_seconds: float, n_active: int) -> None:
@@ -95,6 +100,18 @@ class EngineMetrics:
 
     def record_tick_budget_exhausted(self) -> None:
         self.tick_budget_exhausted += 1
+
+    def record_guard_check(self) -> None:
+        self.guard_checks += 1
+
+    def record_drift_event(self) -> None:
+        self.drift_events += 1
+
+    def record_op_degradation(self, n_ops: int = 1) -> None:
+        self.op_degradations += n_ops
+
+    def record_op_revival(self) -> None:
+        self.op_revivals += 1
 
     def record_finished(self, session: Session) -> None:
         if session.finish_reason == "cancelled":
@@ -165,6 +182,10 @@ class EngineMetrics:
             "nan_events": self.nan_events,
             "degradations": self.degradations,
             "tick_budget_exhausted": self.tick_budget_exhausted,
+            "guard_checks": self.guard_checks,
+            "drift_events": self.drift_events,
+            "op_degradations": self.op_degradations,
+            "op_revivals": self.op_revivals,
         }
 
     def to_records(self, benchmark: str, prefix: str, x=None) -> list:
@@ -257,6 +278,7 @@ class EngineMetrics:
                 value=float(
                     s["requeues"] + s["quarantines"] + s["nan_events"]
                     + s["degradations"] + s["deadline_expired"]
+                    + s["drift_events"] + s["op_degradations"]
                 ),
                 unit="count",
                 better="info",
@@ -269,8 +291,12 @@ class EngineMetrics:
                     "deadline_expired": s["deadline_expired"],
                     "preemptions": s["preemptions"],
                     "tick_budget_exhausted": s["tick_budget_exhausted"],
+                    "guard_checks": s["guard_checks"],
+                    "drift_events": s["drift_events"],
+                    "op_degradations": s["op_degradations"],
+                    "op_revivals": s["op_revivals"],
                 },
-                info="fault-handling events (requeue/quarantine/nan/degrade/deadline)",
+                info="fault-handling events (requeue/quarantine/nan/degrade/deadline/drift)",
             ),
         ]
         if self.n_pages:
@@ -412,6 +438,10 @@ class ClusterMetrics:
             "quarantines": sum(m.quarantines for m in parts),
             "nan_events": sum(m.nan_events for m in parts),
             "degradations": sum(m.degradations for m in parts),
+            "guard_checks": sum(m.guard_checks for m in parts),
+            "drift_events": sum(m.drift_events for m in parts),
+            "op_degradations": sum(m.op_degradations for m in parts),
+            "op_revivals": sum(m.op_revivals for m in parts),
             "failovers": dict(self.failovers),
             "failover_skipped": self.failover_skipped,
             "half_opens": self.half_opens,
@@ -521,6 +551,7 @@ class ClusterMetrics:
                 value=float(
                     s["requeues"] + s["quarantines"] + s["nan_events"]
                     + s["degradations"] + s["deadline_expired"] + s["failures"]
+                    + s["drift_events"] + s["op_degradations"]
                 ),
                 unit="count",
                 better="info",
@@ -533,6 +564,10 @@ class ClusterMetrics:
                     "deadline_expired": s["deadline_expired"],
                     "failovers": sum(s["failovers"].values()),
                     "tick_budget_exhausted": s["tick_budget_exhausted"],
+                    "guard_checks": s["guard_checks"],
+                    "drift_events": s["drift_events"],
+                    "op_degradations": s["op_degradations"],
+                    "op_revivals": s["op_revivals"],
                 },
                 info="cluster fault-handling events (incl. replica failovers)",
             ),

@@ -1,0 +1,424 @@
+"""Numerics guard: shadow-oracle verification, sentinels, per-op degradation.
+
+The acceptance contract from docs/robustness.md#numerics-guard drives these
+tests: clean kernels never trip the guard, injected drift always does, the
+int8 saturation sentinel fires on genuinely saturating inputs, a tripped op
+quarantines to the oracle and revives through the breaker's half-open probe,
+and a guarded serving engine survives op-targeted chaos with token-exact
+output and zero whole-engine degradations.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:  # the fuzzing variants need hypothesis; everything else runs without
+    from hypothesis import given, settings, strategies as st
+    FAST = settings(max_examples=10, deadline=None)
+except ImportError:
+    given = None
+
+from repro.configs import get_config
+from repro.kernels import api, guard
+from repro.kernels.api import kernel_policy
+from repro.models import build_model
+from repro.serve import EngineConfig, Fault, FaultInjector, FaultPlan, ServeEngine
+
+
+@pytest.fixture(autouse=True)
+def _fresh_guard():
+    """Every test runs on a fresh, isolated guard state (injections and
+    breaker trips cannot leak across tests or into the process global)."""
+    with guard.isolated():
+        yield
+
+
+@pytest.fixture(scope="module")
+def gemma():
+    cfg = get_config("gemma-2b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _pair(m, k, n, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return (jnp.asarray(rng.standard_normal((m, k)), dtype),
+            jnp.asarray(rng.standard_normal((k, n)), dtype))
+
+
+# ---------------------------------------------------------------------------
+# tolerance ladder
+# ---------------------------------------------------------------------------
+def test_tolerance_resolves_through_hw_ladder():
+    # T4 publishes fp16 but not bf16: bf16 results are judged at fp16 ulps
+    t = guard.tolerance(jnp.bfloat16)
+    assert t.resolved == "float16" and not t.exact
+    assert t.rtol == pytest.approx(32 * 2.0**-10)
+    t32 = guard.tolerance(np.float32)
+    assert t32.resolved == "float32"
+    assert t32.rtol == pytest.approx(256 * 2.0**-23)
+    # tighter precisions get tighter budgets, monotonically
+    assert t32.rtol < t.rtol
+
+
+def test_tolerance_integer_dtypes_are_exact():
+    for dt in (np.int8, np.int32, np.uint8, np.bool_):
+        t = guard.tolerance(dt)
+        assert t.exact and t.rtol == 0.0 and t.atol == 0.0
+
+
+def test_compare_exact_and_tolerant_paths():
+    t = guard.tolerance(np.int32)
+    a = np.arange(6, dtype=np.int32)
+    assert guard.compare(a, a.copy(), t).ok
+    b = a.copy()
+    b[3] += 1
+    rep = guard.compare(b, a, t)
+    assert not rep.ok and rep.max_abs == 1.0
+    tf = guard.tolerance(np.float32)
+    x = np.linspace(-2, 2, 64, dtype=np.float32)
+    assert guard.compare(x, x + 1e-7, tf).ok
+    assert not guard.compare(x, x + 1.0, tf).ok
+
+
+def test_compare_finiteness_mismatch_is_drift():
+    tf = guard.tolerance(np.float32)
+    x = np.ones(8, np.float32)
+    y = x.copy()
+    y[0] = np.nan
+    rep = guard.compare(y, x, tf)
+    assert not rep.ok and rep.max_ulp == float("inf")
+
+
+def test_trees_match_reports_worst_leaf():
+    ok, detail = guard.trees_match({"a": jnp.ones(4)}, {"a": jnp.ones(4)})
+    assert ok and detail == ""
+    ok, detail = guard.trees_match(
+        {"a": jnp.ones(4), "b": jnp.zeros(3)},
+        {"a": jnp.ones(4), "b": jnp.full(3, 9.0)},
+    )
+    assert not ok and "leaf[1]" in detail
+    ok, detail = guard.trees_match((jnp.ones(2),), (jnp.ones(2), jnp.ones(2)))
+    assert not ok and "structure" in detail
+
+
+def test_guard_config_validation():
+    with pytest.raises(ValueError, match="sample_stride"):
+        guard.GuardConfig(sample_stride=0)
+    with pytest.raises(ValueError, match="on_drift"):
+        guard.GuardConfig(on_drift="explode")
+    with pytest.raises(ValueError, match="cooldown"):
+        guard.GuardConfig(cooldown=0)
+    with pytest.raises(ValueError, match="saturation_threshold"):
+        guard.GuardConfig(saturation_threshold=1.5)
+
+
+# ---------------------------------------------------------------------------
+# property: clean runs never trip, injected drift always trips
+# ---------------------------------------------------------------------------
+def _check_clean_matmul(m, k, n, seed):
+    with guard.isolated():
+        a, b = _pair(m, k, n, seed)
+        with kernel_policy(guard="shadow"):
+            out = api.matmul(a, b)
+        assert out.shape == (m, n)
+        gm = guard.metrics()
+        assert gm.checks >= 1 and gm.drift_events == 0
+        assert not guard.quarantined_ops()
+
+
+def _check_injected_drift_trips(scale, seed):
+    with guard.isolated():
+        guard.inject_drift("matmul", scale=scale, seed=seed)
+        a, b = _pair(16, 32, 16, seed)
+        with kernel_policy(guard="shadow"):
+            with pytest.raises(guard.KernelDriftError) as ei:
+                api.matmul(a, b)
+        assert ei.value.op == "matmul"
+        assert guard.is_quarantined("matmul")
+        assert guard.metrics().drift_events == 1
+
+
+@pytest.mark.parametrize("m,k,n,seed", [
+    (16, 16, 16, 0), (16, 64, 32, 1), (32, 32, 16, 2), (32, 16, 32, 3),
+])
+def test_clean_matmul_never_trips_shadow_guard(m, k, n, seed):
+    _check_clean_matmul(m, k, n, seed)
+
+
+@pytest.mark.parametrize("scale,seed", [
+    (0.01, 0), (0.1, 1), (0.5, 2), (1.0, 3),
+])
+def test_injected_drift_always_trips_shadow_guard(scale, seed):
+    _check_injected_drift_trips(scale, seed)
+
+
+if given is not None:  # hypothesis fuzzing over the same invariants
+
+    @given(m=st.sampled_from((16, 32)), k=st.sampled_from((16, 32, 64)),
+           n=st.sampled_from((16, 32)), seed=st.integers(0, 1000))
+    @FAST
+    def test_clean_matmul_never_trips_shadow_guard_fuzz(m, k, n, seed):
+        _check_clean_matmul(m, k, n, seed)
+
+    @given(scale=st.floats(0.01, 1.0), seed=st.integers(0, 1000))
+    @FAST
+    def test_injected_drift_always_trips_shadow_guard_fuzz(scale, seed):
+        _check_injected_drift_trips(scale, seed)
+
+
+def test_drift_error_carries_report():
+    guard.inject_drift("matmul", scale=0.5)
+    a, b = _pair(16, 16, 16)
+    with kernel_policy(guard="shadow"):
+        with pytest.raises(guard.KernelDriftError) as ei:
+            api.matmul(a, b)
+    rep = ei.value.report
+    assert rep.shapes == ((16, 16),) and rep.dtype == "float32"
+    assert rep.max_ulp > rep.tol.ulps
+
+
+def test_sample_mode_checks_on_a_deterministic_stride():
+    guard.configure(sample_stride=4, seed=0)
+    a, b = _pair(16, 16, 16)
+    with kernel_policy(guard="sample"):
+        for _ in range(8):
+            api.matmul(a, b)
+    # calls 0 and 4 of the op are the checked ones: (n + seed) % stride == 0
+    assert guard.metrics().checks == 2
+
+
+def test_sample_mode_misses_drift_between_strides_then_catches_it():
+    guard.configure(sample_stride=4, seed=0, on_drift="oracle")
+    a, b = _pair(16, 16, 16)
+    with kernel_policy(guard="sample"):
+        api.matmul(a, b)  # call 0: checked, clean
+        guard.inject_drift("matmul", scale=0.5)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            for _ in range(4):  # calls 1-3 unchecked; call 4 catches it
+                api.matmul(a, b)
+    assert guard.metrics().drift_events == 1
+    assert guard.is_quarantined("matmul")
+
+
+# ---------------------------------------------------------------------------
+# saturation sentinels
+# ---------------------------------------------------------------------------
+def test_int8_saturation_sentinel_fires():
+    a = jnp.full((16, 16), 64, jnp.int8)
+    with kernel_policy(guard="shadow"):
+        with pytest.raises(guard.SaturationError) as ei:
+            api.matmul(a, a, out_dtype=jnp.int8)
+    assert ei.value.op == "matmul" and ei.value.fraction == 1.0
+    # saturation is a property of the inputs, not the backend: the oracle
+    # would saturate identically, so the breaker must NOT trip
+    assert not guard.is_quarantined("matmul")
+    assert guard.metrics().saturation_events == 1
+
+
+def test_small_int8_matmul_passes_sentinel_and_oracle():
+    a = jnp.ones((16, 16), jnp.int8)
+    with kernel_policy(guard="shadow"):
+        out = api.matmul(a, a, out_dtype=jnp.int32)
+    np.testing.assert_array_equal(np.asarray(out), np.full((16, 16), 16))
+    gm = guard.metrics()
+    assert gm.sentinel_checks >= 1 and gm.saturation_events == 0
+
+
+def test_sentinels_can_be_disabled():
+    guard.configure(sentinels=False)
+    a = jnp.full((16, 16), 64, jnp.int8)
+    with kernel_policy(guard="shadow"):
+        api.matmul(a, a, out_dtype=jnp.int8)  # would raise with sentinels on
+    assert guard.metrics().saturation_events == 0
+
+
+# ---------------------------------------------------------------------------
+# breaker: quarantine, cooldown, half-open revival
+# ---------------------------------------------------------------------------
+def test_breaker_quarantines_then_revives_through_half_open():
+    guard.configure(cooldown=3, probe_checks=2, on_drift="oracle")
+    a, b = _pair(16, 16, 16)
+    with kernel_policy(guard="shadow"):
+        guard.inject_drift("matmul", scale=0.5)
+        with pytest.warns(RuntimeWarning, match="drift"):
+            api.matmul(a, b)  # trip
+        assert guard.is_quarantined("matmul")
+        guard.clear_drift("matmul")
+        ref = np.asarray(api.matmul(a, b))  # served by the oracle while open
+        assert guard.metrics().degraded_calls >= 1
+        for _ in range(8):  # cooldown elapses -> half-open -> 2 clean probes
+            out = api.matmul(a, b)
+        assert not guard.is_quarantined("matmul")
+        np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-5)
+    gm = guard.metrics()
+    assert gm.quarantines == 1 and gm.half_opens >= 1 and gm.revivals == 1
+
+
+def test_reopened_breaker_doubles_its_cooldown():
+    guard.configure(cooldown=4, max_cooldown_doublings=4)
+    s = guard.state()
+    assert s._cooldown_ticks(guard.OpBreaker(fail_count=1)) == 4
+    assert s._cooldown_ticks(guard.OpBreaker(fail_count=3)) == 16
+    assert s._cooldown_ticks(guard.OpBreaker(fail_count=99)) == 64  # capped
+
+
+def test_probe_and_attribution_target_the_faulty_op_only():
+    assert guard.probe("matmul") and guard.probe("axpy")
+    guard.inject_fault("axpy")
+    assert not guard.probe("axpy")
+    bad = guard.attribute()
+    assert bad == ["axpy"]
+    assert guard.is_quarantined("axpy") and not guard.is_quarantined("matmul")
+    # already-quarantined ops are skipped: attribution converges
+    assert guard.attribute() == []
+    guard.clear_fault("axpy")
+    assert guard.probe("axpy")
+    guard.revive("axpy")
+    assert not guard.is_quarantined("axpy")
+
+
+def test_verify_ops_sweep_is_clean_without_injections():
+    reports = guard.verify_ops()
+    assert reports and all(r.ok for r in reports.values())
+
+
+# ---------------------------------------------------------------------------
+# policy scoping
+# ---------------------------------------------------------------------------
+def test_policy_guard_nests_inherits_and_restores():
+    from repro.kernels.api import current_policy
+
+    assert current_policy().guard is None
+    with kernel_policy(guard="shadow"):
+        assert current_policy().guard == "shadow"
+        with kernel_policy(autotune="heuristic"):  # inherits the guard
+            assert current_policy().guard == "shadow"
+        with kernel_policy(guard="off"):  # explicit override
+            assert current_policy().guard == "off"
+        assert current_policy().guard == "shadow"
+        with pytest.raises(RuntimeError, match="boom"):
+            with kernel_policy(guard="off"):
+                raise RuntimeError("boom")
+        assert current_policy().guard == "shadow"  # restored past the raise
+    assert current_policy().guard is None
+    with pytest.raises(ValueError, match="guard"):
+        with kernel_policy(guard="paranoid"):
+            pass
+
+
+def test_guard_off_mode_skips_all_machinery():
+    a, b = _pair(16, 16, 16)
+    guard.inject_drift("matmul", scale=0.5)
+    with kernel_policy(guard="off"):
+        api.matmul(a, b)  # drift not even injected: bound() path
+    assert guard.metrics().checks == 0 and guard.metrics().drift_events == 0
+
+
+# ---------------------------------------------------------------------------
+# fault-plan surface
+# ---------------------------------------------------------------------------
+def test_kernel_drift_fault_validation_and_defaults():
+    f = Fault(tick=0, kind="kernel_drift")
+    assert f.op == "matmul" and f.drift_scale > 0
+    with pytest.raises(ValueError, match="drift_scale"):
+        Fault(tick=0, kind="kernel_drift", drift_scale=0.0)
+    # random plans must never draw undetectable drift (guard-off engines
+    # would silently corrupt tokens): kernel_drift is opt-in only
+    plan = FaultPlan.random(3, n_ticks=32, n_faults=12)
+    assert all(f.kind != "kernel_drift" for f in plan.faults)
+
+
+# ---------------------------------------------------------------------------
+# the acceptance criterion: guarded engine under op-targeted chaos
+# ---------------------------------------------------------------------------
+def _guard_plan():
+    return FaultPlan(seed=42, faults=(
+        Fault(tick=2, kind="kernel_drift", replica=0, duration=2,
+              op="matmul", drift_scale=0.25),
+        Fault(tick=6, kind="kernel_fault", replica=0, op="flash_attention"),
+    ))
+
+
+def _prompts(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [[int(t) for t in rng.integers(1, cfg.vocab_size, 5)]
+            for _ in range(n)]
+
+
+def _run_engine(model, params, prompts, **cfg_kw):
+    engine = ServeEngine(model, params, EngineConfig(
+        n_slots=2, max_len=32, prefill_chunk=4, **cfg_kw))
+    sessions = [engine.submit(p, 8) for p in prompts]
+    return engine, sessions
+
+
+def test_guarded_engine_clean_run_is_exact_with_zero_drift(gemma):
+    cfg, model, params = gemma
+    prompts = _prompts(cfg, 2, seed=5)
+    ref_engine, ref = _run_engine(model, params, prompts)
+    ref_engine.run()
+    engine, sessions = _run_engine(model, params, prompts, guard="shadow")
+    engine.run()
+    assert [s.out for s in sessions] == [s.out for s in ref]
+    summ = engine.summary()
+    assert summ["guard_checks"] > 0
+    assert summ["drift_events"] == 0 and summ["op_degradations"] == 0
+
+
+def test_guarded_engine_detects_quarantines_heals_token_exact(gemma):
+    cfg, model, params = gemma
+    prompts = _prompts(cfg, 2, seed=5)
+    ref_engine, ref = _run_engine(model, params, prompts)
+    ref_engine.run()
+
+    engine, sessions = _run_engine(
+        model, params, prompts, guard="shadow", guard_cooldown=2)
+    injector = FaultInjector(_guard_plan(), engine)
+    with pytest.warns(RuntimeWarning, match="quarantined kernel op"):
+        injector.run()
+
+    # token-exact: every drifted/faulted step was repaired from the shadow
+    assert all(s.done for s in sessions)
+    assert [s.out for s in sessions] == [s.out for s in ref]
+    summ = engine.summary()
+    # 100% detection: every perturbed step raised a drift event
+    assert engine._injected_drift_calls >= 1
+    assert summ["drift_events"] == engine._injected_drift_calls
+    # exactly the targeted ops were quarantined — and never the whole engine
+    assert guard.metrics().quarantined_ops == {"matmul", "flash_attention"}
+    assert summ["op_degradations"] == 2 and summ["degradations"] == 0
+    assert not engine._degraded
+    # both ops heal once their faults expire — the drift-era quarantine
+    # already revived mid-run; drive a few more ticks for the late one
+    heal = engine.submit(prompts[0], 4)
+    engine.run()
+    assert heal.done
+    summ = engine.summary()
+    assert summ["op_revivals"] == 2 and not engine._op_quarantine
+    assert not guard.quarantined_ops()
+
+
+def test_guarded_engine_runs_are_deterministic(gemma):
+    cfg, model, params = gemma
+    prompts = _prompts(cfg, 2, seed=5)
+
+    def one_run():
+        with guard.isolated():
+            engine, sessions = _run_engine(
+                model, params, prompts, guard="shadow", guard_cooldown=2)
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", RuntimeWarning)
+                FaultInjector(_guard_plan(), engine).run()
+            summ = engine.summary()
+            keys = ("drift_events", "op_degradations", "op_revivals",
+                    "degradations")
+            return [s.out for s in sessions], {k: summ[k] for k in keys}
+
+    outs1, summ1 = one_run()
+    outs2, summ2 = one_run()
+    assert outs1 == outs2 and summ1 == summ2
